@@ -1,0 +1,60 @@
+"""Paper Fig 15-18: approximation accuracy vs sampling fraction and
+geohash granularity (MAE / MAPE of per-cell mean speed vs 100% baseline).
+
+Claims validated:
+  * MAPE < 10% at 80% sampling, Geohash-6 (Fig 16);
+  * MAE decreases ~linearly with fraction (Fig 15);
+  * Geohash-5 reduces error ~30% vs Geohash-6 at the same fraction
+    (Fig 17-18) — larger cells => more samples per stratum => stabler means.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import estimators, make_table, sampling, SHENZHEN_BBOX
+from repro.data.streams import materialize, shenzhen_taxi_stream
+
+from .common import csv_line, mape_mae
+
+
+def _per_stratum_accuracy(table, lat, lon, val, fraction, key):
+    sidx = table.assign(lat, lon)
+    res = sampling.edgesos(key, sidx, table.num_slots, fraction, method="srs")
+    stats = estimators.sample_stats(val, sidx, res.mask, table.num_slots, counts=res.counts)
+    full = estimators.sample_stats(val, sidx, jnp.ones_like(res.mask), table.num_slots)
+    counts = np.asarray(res.counts)[:-1]
+    est = np.asarray(stats.mean)[:-1]
+    true = np.asarray(full.mean)[:-1]
+    return est, true, counts
+
+
+def run(fractions=(0.2, 0.4, 0.6, 0.8, 1.0), num_chunks=12, min_count=20):
+    data = materialize(shenzhen_taxi_stream(num_chunks=num_chunks, seed=3))
+    lat = jnp.asarray(data["lat"])
+    lon = jnp.asarray(data["lon"])
+    val = jnp.asarray(data["value"])
+    lines = []
+    results = {}
+    for precision in (5, 6):
+        table = make_table(*SHENZHEN_BBOX, precision=precision)
+        for f in fractions:
+            est, true, counts = _per_stratum_accuracy(
+                table, lat, lon, val, f, jax.random.key(int(f * 100) + precision)
+            )
+            mape, mae = mape_mae(est, true, counts, min_count=min_count)
+            results[(precision, f)] = (mape, mae)
+            lines.append(
+                csv_line(f"accuracy_g{precision}_f{int(f*100)}", 0.0,
+                         f"mape_pct={mape:.3f};mae={mae:.4f};n_strata={int((counts>=min_count).sum())}")
+            )
+    m6, m5 = results[(6, 0.8)][0], results[(5, 0.8)][0]
+    improve = 100.0 * (m6 - m5) / max(m6, 1e-9)
+    lines.append(csv_line("accuracy_gate_mape80_g6", 0.0,
+                          f"mape_pct={m6:.3f};paper_gate=<10;pass={m6 < 10.0}"))
+    lines.append(csv_line("accuracy_g5_vs_g6_at80", 0.0,
+                          f"g5={m5:.3f};g6={m6:.3f};reduction_pct={improve:.1f};paper~30"))
+    return lines

@@ -1,0 +1,40 @@
+"""Shared benchmark utilities: timing + the paper's error metrics."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def time_call(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time of fn(*args) in microseconds (blocking)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))
+
+
+def mape_mae(est_means: np.ndarray, true_means: np.ndarray, counts: np.ndarray,
+             min_count: int = 1):
+    """Paper's per-stratum error metrics vs the 100%-sampling ground truth.
+
+    MAPE/MAE over strata with >= min_count tuples (the paper's charts
+    exclude near-empty cells' extreme outliers from the main figures).
+    """
+    ok = (counts >= min_count) & np.isfinite(true_means) & (np.abs(true_means) > 1e-9)
+    e = est_means[ok]
+    t = true_means[ok]
+    ape = np.abs(e - t) / np.abs(t)
+    return float(np.mean(ape) * 100.0), float(np.mean(np.abs(e - t)))
+
+
+def csv_line(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,126 @@
+"""Paper Fig 20-21 + Table: EdgeApproxGeo vs cloud-only SpatialSSJP.
+
+SpatialSSJP baseline (implemented here, per the paper's description): all
+raw tuples ship to the cloud, which performs geohashing, neighborhood
+categorization, stratified sampling and aggregation centrally in one pass.
+
+EdgeApproxGeo: E edge shards independently geohash + EdgeSOS-sample their
+local substreams (decentralized, no coordination), ship sampled tuples
+(raw mode) or per-stratum moments (pre-agg mode); the cloud only merges
+pre-partitioned data.
+
+Reported (Chicago-AQ-like stream, per the paper's §5.4 protocol):
+  * per-neighborhood absolute percentage error vs the full-data baseline
+    for both systems (paper: no significant difference; edge slightly
+    wider tail from windowed sampling);
+  * cloud-side work time: centralized assign+sample+aggregate vs
+    merge-only (the paper's 15-20% reduction is end-to-end on Azure; we
+    report the cloud-compute component measured here);
+  * upstream bytes: raw vs sampled vs pre-aggregated.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import CHICAGO_BBOX, estimators, make_table, sampling
+from repro.data.streams import chicago_aq_stream, materialize
+
+from .common import csv_line, time_call
+
+TUPLE_BYTES = 4 + 8 + 4 + 4 + 4  # id, ts, lat, lon, value
+
+
+def _nbhd_means(table, stats):
+    """Aggregate stratum stats to neighborhood means."""
+    nb = np.asarray(table.neighborhood)[:-1]
+    n = np.asarray(stats.n)[:-1]
+    s = np.asarray(stats.wsum)[:-1]
+    out_n = np.zeros(table.num_neighborhoods)
+    out_s = np.zeros(table.num_neighborhoods)
+    np.add.at(out_n, nb, n)
+    np.add.at(out_s, nb, s)
+    with np.errstate(invalid="ignore", divide="ignore"):
+        return out_s / out_n, out_n
+
+
+def run(fraction=0.8, num_edges=8, num_chunks=13):
+    data = materialize(chicago_aq_stream(num_chunks=num_chunks, seed=11))
+    table = make_table(*CHICAGO_BBOX, precision=6, neighborhood_precision=4)
+    lat = jnp.asarray(data["lat"])
+    lon = jnp.asarray(data["lon"])
+    val = jnp.asarray(data["value"])
+    n = val.shape[0]
+
+    # ---------------- ground truth (100% of the data) -----------------------
+    sidx_full = table.assign(lat, lon)
+    full_stats = estimators.sample_stats(val, sidx_full, jnp.ones(n, bool), table.num_slots)
+    true_means, true_n = _nbhd_means(table, full_stats)
+
+    # ---------------- SpatialSSJP: centralized one-pass ---------------------
+    @jax.jit
+    def cloud_only(lat, lon, val, key):
+        sidx = table.assign(lat, lon)  # spatial join in the cloud
+        res = sampling.edgesos(key, sidx, table.num_slots, fraction)
+        stats = estimators.sample_stats(val, sidx, res.mask, table.num_slots, counts=res.counts)
+        return stats
+
+    cloud_stats = cloud_only(lat, lon, val, jax.random.key(42))
+    cloud_means, _ = _nbhd_means(table, cloud_stats)
+    cloud_us = time_call(cloud_only, lat, lon, val, jax.random.key(42))
+
+    # ---------------- EdgeApproxGeo: decentralized + pre-agg ----------------
+    # edge side: each shard samples its substream independently
+    splits = np.array_split(np.arange(n), num_edges)
+
+    @jax.jit
+    def edge_step(lat_s, lon_s, val_s, key):
+        sidx = table.assign(lat_s, lon_s)
+        res = sampling.edgesos(key, sidx, table.num_slots, fraction)
+        return estimators.sample_stats(val_s, sidx, res.mask, table.num_slots, counts=res.counts)
+
+    edge_stats = []
+    edge_us = []
+    for i, idx in enumerate(splits):
+        idxj = jnp.asarray(idx)
+        a = (lat[idxj], lon[idxj], val[idxj], jax.random.key(100 + i))
+        edge_stats.append(edge_step(*a))
+        edge_us.append(time_call(edge_step, *a))
+
+    # cloud side: merge pre-aggregated per-stratum moments only
+    @jax.jit
+    def cloud_merge(stats_list):
+        return estimators.merge_all(stats_list)
+
+    merged = cloud_merge(edge_stats)
+    edge_means, _ = _nbhd_means(table, merged)
+    merge_us = time_call(cloud_merge, edge_stats)
+
+    # ---------------- error comparison (Fig 20) -----------------------------
+    ok = true_n >= 20
+    ape_cloud = np.abs(cloud_means[ok] - true_means[ok]) / np.abs(true_means[ok]) * 100
+    ape_edge = np.abs(edge_means[ok] - true_means[ok]) / np.abs(true_means[ok]) * 100
+
+    # ---------------- bytes shipped upstream --------------------------------
+    bytes_raw = n * TUPLE_BYTES
+    bytes_sampled = int(n * fraction) * (TUPLE_BYTES + 4 + 4)  # +geohash+nbhd
+    bytes_preagg = num_edges * 4 * 4 * table.num_slots
+
+    reduction = 100.0 * (cloud_us - merge_us) / max(cloud_us, 1e-9)
+    lines = [
+        csv_line("evc_cloud_only_us", cloud_us,
+                 f"mean_ape_pct={ape_cloud.mean():.4f};p95_ape={np.percentile(ape_cloud,95):.4f}"),
+        csv_line("evc_edge_total_us", float(np.max(edge_us)),
+                 f"parallel_edge_max_shard_us={np.max(edge_us):.0f};mean_ape_pct={ape_edge.mean():.4f};p95_ape={np.percentile(ape_edge,95):.4f}"),
+        csv_line("evc_cloud_merge_us", merge_us,
+                 f"cloud_work_reduction_pct={reduction:.1f};paper_endtoend~15-20"),
+        csv_line("evc_bytes_upstream", 0.0,
+                 f"raw={bytes_raw};sampled={bytes_sampled};preagg={bytes_preagg};"
+                 f"preagg_vs_raw_x={bytes_raw/max(bytes_preagg,1):.0f}"),
+        csv_line("evc_error_parity", 0.0,
+                 f"edge_minus_cloud_mean_ape={ape_edge.mean()-ape_cloud.mean():.4f};paper=no_significant_difference"),
+    ]
+    return lines

@@ -1,0 +1,65 @@
+"""Kernel microbenchmarks: Pallas (interpret off-TPU) vs jnp oracle.
+
+Off-TPU the interpret-mode timing is not meaningful as TPU perf; the bench
+records correctness deltas + oracle timing so regressions are visible, and
+runs the real kernels when a TPU backend is present.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.geohash import geohash_encode
+from repro.kernels.geohash.ref import encode_ref
+from repro.kernels.sample_mask import sample_mask
+from repro.kernels.sample_mask.ref import sample_mask_ref
+from repro.kernels.stratified_stats import stratified_stats
+from repro.kernels.stratified_stats.ref import stratified_stats_ref
+
+from .common import csv_line, time_call
+
+
+def run():
+    rng = np.random.default_rng(0)
+    lines = []
+    n = 50_000
+    lat = jnp.asarray(rng.uniform(-89, 89, n), jnp.float32)
+    lon = jnp.asarray(rng.uniform(-179, 179, n), jnp.float32)
+    ref_us = time_call(lambda a, b: encode_ref(a, b, 6), lat, lon)
+    got = geohash_encode(lat, lon, 6)
+    exact = bool(jnp.all(got == encode_ref(lat, lon, 6)))
+    lines.append(csv_line("kernel_geohash_ref", ref_us, f"n={n};kernel_exact={exact}"))
+
+    sidx = jnp.asarray(rng.integers(0, 1000, n), jnp.int32)
+    vals = jnp.asarray(rng.normal(10, 3, n), jnp.float32)
+    mask = jnp.asarray(rng.random(n) < 0.8)
+    ref_us = time_call(lambda s, v, m: stratified_stats_ref(s, v, m, 1000), sidx, vals, mask)
+    g = stratified_stats(sidx, vals, mask, 1000)
+    r = stratified_stats_ref(sidx, vals, mask, 1000)
+    ok = all(bool(jnp.allclose(a, b, rtol=1e-5, atol=1e-2)) for a, b in zip(g, r))
+    lines.append(csv_line("kernel_stratified_stats_ref", ref_us, f"n={n};allclose={ok}"))
+
+    frac = jnp.asarray(rng.uniform(0.1, 1.0, 1000), jnp.float32)
+    u = jnp.asarray(rng.random(n), jnp.float32)
+    ref_us = time_call(sample_mask_ref, sidx, u, frac)
+    gm, gw = sample_mask(sidx, u, frac)
+    rm, rw = sample_mask_ref(sidx, u, frac)
+    ok = bool(jnp.all(gm == rm)) and bool(jnp.allclose(gw, rw, rtol=1e-5))
+    lines.append(csv_line("kernel_sample_mask_ref", ref_us, f"n={n};match={ok}"))
+
+    B, S, H, K, dh = 1, 512, 8, 2, 64
+    q = jnp.asarray(rng.normal(0, 1, (B, S, H, dh)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(0, 1, (B, S, K, dh)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(0, 1, (B, S, K, dh)), jnp.bfloat16)
+    ref_us = time_call(flash_attention_ref, q, k, v)
+    o = flash_attention(q, k, v)
+    r = flash_attention_ref(q, k, v)
+    err = float(jnp.max(jnp.abs(o.astype(jnp.float32) - r.astype(jnp.float32))))
+    lines.append(csv_line("kernel_flash_attention_ref", ref_us,
+                          f"S={S};H={H};K={K};max_err={err:.4f};backend={jax.default_backend()}"))
+    return lines

@@ -1,0 +1,46 @@
+"""Roofline reporting: reads the dry-run artifacts and emits the per-cell
+three-term table (also consumed to build EXPERIMENTS.md §Roofline)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import csv_line
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_records(dryrun_dir: str = DRYRUN_DIR) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(dryrun_dir: str = DRYRUN_DIR):
+    lines = []
+    recs = load_records(dryrun_dir)
+    ok = [r for r in recs if r.get("status") == "ok"]
+    skipped = [r for r in recs if r.get("status") == "skipped"]
+    errors = [r for r in recs if r.get("status") == "error"]
+    for r in ok:
+        rf = r["roofline"]
+        mem = r["memory"]
+        mem_gib = mem.get("peak_tpu_estimate_bytes", mem["peak_estimate_bytes"]) / 2**30
+        lines.append(
+            csv_line(
+                f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+                rf["bound_s"] * 1e6,
+                f"compute_s={rf['compute_s']:.3e};memory_s={rf['memory_s']:.3e};"
+                f"collective_s={rf['collective_s']:.3e};dominant={rf['dominant']};"
+                f"roofline_fraction={rf['roofline_fraction']:.4f};"
+                f"useful_flops_ratio={r['useful_flops_ratio']:.3f};"
+                f"mem_gib_per_chip_tpu={mem_gib:.2f}",
+            )
+        )
+    lines.append(csv_line("dryrun_summary", 0.0,
+                          f"ok={len(ok)};skipped={len(skipped)};errors={len(errors)}"))
+    return lines

@@ -1,0 +1,59 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.
+
+  Fig 8      -> ingest_throughput
+  Fig 9-11   -> edgesos_latency
+  Fig 15-16  -> accuracy (fraction sweep, MAPE gate)
+  Fig 17-18  -> accuracy (geohash-5 vs -6)
+  Fig 19     -> cloud_batch
+  Fig 20-21  -> edge_vs_cloud (SpatialSSJP baseline implemented)
+  kernels    -> kernel_bench
+  §Roofline  -> roofline (reads experiments/dryrun artifacts)
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (
+        accuracy,
+        cloud_batch,
+        edge_vs_cloud,
+        edgesos_latency,
+        ingest_throughput,
+        kernel_bench,
+        roofline,
+    )
+
+    modules = [
+        ("ingest_throughput", ingest_throughput),
+        ("edgesos_latency", edgesos_latency),
+        ("accuracy", accuracy),
+        ("cloud_batch", cloud_batch),
+        ("edge_vs_cloud", edge_vs_cloud),
+        ("kernel_bench", kernel_bench),
+        ("roofline", roofline),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in modules:
+        if only and name != only:
+            continue
+        try:
+            for line in mod.run():
+                print(line, flush=True)
+        except Exception as e:
+            failures += 1
+            print(f"{name},0,ERROR:{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(f"{failures} benchmark modules failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Batched serving demo: continuous batching over prefill/decode.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+
+from repro.launch import serve
+
+
+def main():
+    serve.main([
+        "--arch", "qwen1.5-0.5b", "--requests", "8", "--batch", "4",
+        "--prompt-len", "32", "--max-new", "16",
+    ])
+
+
+if __name__ == "__main__":
+    main()

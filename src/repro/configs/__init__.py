@@ -1,0 +1,48 @@
+"""Architecture registry: one module per assigned architecture."""
+
+from __future__ import annotations
+
+import importlib
+
+from ..models.base import ModelConfig
+from .shapes import LONG_CONTEXT_FAMILIES, SHAPES, ShapeSpec, supports_cell
+
+ARCH_MODULES = {
+    "xlstm-1.3b": "xlstm_1_3b",
+    "mistral-large-123b": "mistral_large_123b",
+    "deepseek-67b": "deepseek_67b",
+    "internlm2-1.8b": "internlm2_1_8b",
+    "qwen1.5-0.5b": "qwen1_5_0_5b",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "zamba2-7b": "zamba2_7b",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+}
+
+ARCH_NAMES = tuple(ARCH_MODULES)
+
+
+def _module(name: str):
+    if name not in ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; choose from {ARCH_NAMES}")
+    return importlib.import_module(f".{ARCH_MODULES[name]}", __package__)
+
+
+def get_config(name: str) -> ModelConfig:
+    return _module(name).CONFIG
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    return _module(name).SMOKE
+
+
+__all__ = [
+    "ARCH_NAMES",
+    "LONG_CONTEXT_FAMILIES",
+    "SHAPES",
+    "ShapeSpec",
+    "get_config",
+    "get_smoke_config",
+    "supports_cell",
+]

@@ -1,0 +1,25 @@
+"""deepseek-67b [dense]: llama-arch, 95L d=8192 64H GQA kv=8 d_ff=22016
+v=102400 [arXiv:2401.02954]."""
+
+from ..models.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-67b",
+    family="dense",
+    num_layers=95,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=22016,
+    vocab_size=102400,
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=3,
+    d_model=128,
+    num_heads=8,
+    num_kv_heads=2,
+    d_ff=320,
+    vocab_size=512,
+    remat="none",
+)

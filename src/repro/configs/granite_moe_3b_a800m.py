@@ -1,0 +1,35 @@
+"""granite-moe-3b-a800m [moe]: 32L d=1536 24H GQA kv=8 d_ff=512/expert,
+40 experts top-8, v=49155 [hf:ibm-granite/granite-3.0 family].
+
+Note: the assignment line reads "MoE 40e top-8 — 32 experts top-8"; we take
+the config field (40 experts).  40 doesn't divide the 16-way model axis, so
+the rules layer replicates the expert dim and shards the per-expert mlp dim
+instead (d_ff=512 -> 32 per shard) — see DESIGN.md §Arch-applicability.
+"""
+
+from ..models.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-3b-a800m",
+    family="moe",
+    num_layers=32,
+    d_model=1536,
+    num_heads=24,
+    num_kv_heads=8,
+    d_ff=512,
+    vocab_size=49155,
+    num_experts=40,
+    num_experts_per_tok=8,
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    d_ff=32,
+    vocab_size=512,
+    num_experts=8,
+    num_experts_per_tok=2,
+    remat="none",
+)

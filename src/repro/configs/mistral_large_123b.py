@@ -1,0 +1,28 @@
+"""mistral-large-123b [dense]: 88L d=12288 96H GQA kv=8 d_ff=28672 v=32768.
+
+[hf:mistralai/Mistral-Large-Instruct-2407]
+"""
+
+from ..models.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mistral-large-123b",
+    family="dense",
+    num_layers=88,
+    d_model=12288,
+    num_heads=96,
+    num_kv_heads=8,
+    d_ff=28672,
+    vocab_size=32768,
+    rope_theta=1_000_000.0,
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=2,
+    d_model=128,
+    num_heads=8,
+    num_kv_heads=2,
+    d_ff=256,
+    vocab_size=512,
+    remat="none",
+)

@@ -1,0 +1,29 @@
+"""olmoe-1b-7b [moe]: 16L d=2048 16H kv=16 d_ff=1024/expert, 64 experts
+top-8, v=50304 [arXiv:2409.02060]."""
+
+from ..models.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="olmoe-1b-7b",
+    family="moe",
+    num_layers=16,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=1024,
+    vocab_size=50304,
+    num_experts=64,
+    num_experts_per_tok=8,
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=32,
+    vocab_size=512,
+    num_experts=8,
+    num_experts_per_tok=2,
+    remat="none",
+)

@@ -1,0 +1,40 @@
+"""Per-(arch x shape) execution plans: the perf knobs used by the launcher.
+
+Defaults were derived from napkin math on v5e (16 GB HBM/chip): the scan
+carry saved for backward is B_local*S*d_model*2 bytes per layer, so large-d
+archs need sequence-parallel carries and/or microbatching to fit; the perf
+log in EXPERIMENTS.md §Perf records the iterations that produced these.
+"""
+
+from __future__ import annotations
+
+from ..train.train_loop import StepPlan
+
+_DEFAULT = StepPlan(num_microbatches=1, sequence_parallel=False, remat="full")
+
+# train_4k plans keyed by arch
+TRAIN_PLANS: dict[str, StepPlan] = {
+    "xlstm-1.3b": StepPlan(num_microbatches=4, sequence_parallel=False, remat="full"),
+    "mistral-large-123b": StepPlan(num_microbatches=8, sequence_parallel=True, remat="full"),
+    "deepseek-67b": StepPlan(num_microbatches=4, sequence_parallel=True, remat="full"),
+    "internlm2-1.8b": StepPlan(num_microbatches=2, sequence_parallel=False, remat="full"),
+    "qwen1.5-0.5b": StepPlan(num_microbatches=1, sequence_parallel=False, remat="full"),
+    "qwen2-vl-72b": StepPlan(num_microbatches=8, sequence_parallel=True, remat="full"),
+    "seamless-m4t-large-v2": StepPlan(num_microbatches=2, sequence_parallel=False, remat="full"),
+    "zamba2-7b": StepPlan(num_microbatches=8, sequence_parallel=False, remat="full"),
+    "granite-moe-3b-a800m": StepPlan(num_microbatches=8, sequence_parallel=False, remat="full"),
+    "olmoe-1b-7b": StepPlan(num_microbatches=4, sequence_parallel=False, remat="full"),
+}
+
+# serving plans (prefill/decode): SP toggles carry sharding during prefill
+SERVE_PLANS: dict[str, StepPlan] = {
+    "mistral-large-123b": StepPlan(sequence_parallel=True, remat="none"),
+    "deepseek-67b": StepPlan(sequence_parallel=True, remat="none"),
+    "qwen2-vl-72b": StepPlan(sequence_parallel=True, remat="none"),
+}
+
+
+def get_plan(arch: str, kind: str) -> StepPlan:
+    if kind == "train":
+        return TRAIN_PLANS.get(arch, _DEFAULT)
+    return SERVE_PLANS.get(arch, StepPlan(remat="none"))

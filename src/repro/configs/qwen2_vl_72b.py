@@ -1,0 +1,30 @@
+"""qwen2-vl-72b [vlm]: 80L d=8192 64H GQA kv=8 d_ff=29568 v=152064,
+M-RoPE (t/h/w rotary sections), dynamic-resolution vision frontend as a
+STUB: input_specs feeds precomputed patch embeddings [arXiv:2409.12191]."""
+
+from ..models.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-72b",
+    family="vlm",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=29568,
+    vocab_size=152064,
+    embeddings_in=True,
+    mrope_sections=(16, 24, 24),  # sums to head_dim/2 = 64
+    rope_theta=1_000_000.0,
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=2,
+    d_model=128,
+    num_heads=8,
+    num_kv_heads=2,
+    d_ff=256,
+    vocab_size=512,
+    mrope_sections=(4, 2, 2),  # head_dim 16 -> half 8
+    remat="none",
+)

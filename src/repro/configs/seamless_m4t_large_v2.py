@@ -1,0 +1,36 @@
+"""seamless-m4t-large-v2 [audio]: enc-dec, 24L enc + 24L dec, d=1024 16H
+kv=16 d_ff=8192 v=256206 [arXiv:2308.11596].
+
+The speech frontend is a STUB per the assignment: input_specs provides
+precomputed frame embeddings to the encoder; the decoder is a text decoder
+with cross-attention.  The assignment's "24L" is read as 24 encoder + 24
+decoder layers (the m4t-large text-to-text stack); see DESIGN.md.
+"""
+
+from ..models.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    family="encdec",
+    num_layers=24,
+    encoder_layers=24,
+    decoder_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=8192,
+    vocab_size=256206,
+    embeddings_in=True,
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=2,
+    encoder_layers=2,
+    decoder_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=128,
+    vocab_size=512,
+    remat="none",
+)

@@ -1,0 +1,34 @@
+"""Assigned input shapes. Each cell = (architecture, shape)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+# Families able to decode at 500K context (sub-quadratic / O(1) state).
+LONG_CONTEXT_FAMILIES = ("ssm", "xlstm", "hybrid")
+
+
+def supports_cell(family: str, shape: str) -> tuple[bool, str]:
+    """(supported, reason-if-not). Documented skips per the assignment."""
+    if shape == "long_500k" and family not in LONG_CONTEXT_FAMILIES:
+        return False, (
+            "long_500k requires sub-quadratic attention; this arch is pure "
+            "full-attention (see DESIGN.md §Arch-applicability)"
+        )
+    return True, ""

@@ -1,0 +1,49 @@
+"""zamba2-7b [hybrid]: 81 Mamba-2 layers + a shared attention block applied
+every 6 layers, d=3584 32H kv=32 d_ff=14336 ssm_state=64 v=32000
+[arXiv:2411.15242].
+
+Simplifications vs the HF checkpoint (documented in DESIGN.md): one shared
+attention+MLP block without per-invocation LoRA deltas, and no embedding
+concat at shared-block inputs.  For long_500k decode the shared attention
+runs a 4096-token ring-buffer window (set by the launcher) so state stays
+O(window) — the Mamba backbone carries the long-range channel.
+"""
+
+from ..models.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    num_layers=81,
+    d_model=3584,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=112,
+    d_ff=14336,
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_head_dim=64,
+    ssm_groups=2,
+    ssm_expand=2,
+    shared_attn_every=6,
+    conv_width=4,
+    # GLA chunk: intra-chunk score blocks scale with C^2 x ssm_heads (112);
+    # 128 keeps the fwd+bwd transient set inside HBM (§Perf iteration 3).
+    chunk_size=128,
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=7,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=512,
+    ssm_state=16,
+    ssm_head_dim=16,
+    ssm_groups=2,
+    shared_attn_every=3,
+    chunk_size=32,
+    remat="none",
+)

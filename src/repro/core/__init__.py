@@ -1,0 +1,53 @@
+"""EdgeApproxGeo core: the paper's contribution as composable JAX modules.
+
+Layers (bottom-up):
+  geohash     — Morton-coded geohash encode/decode (pure integer JAX)
+  stratify    — stratum tables (regular geohash grid + neighborhood map)
+  sampling    — EdgeSOS decentralized stratified sampling (Algorithm 1)
+  estimators  — stratified SUM/MEAN + variance/CI/MoE/RE (eqs 1-10)
+  routing     — spatial-aware data distribution (topic-per-neighborhood)
+  feedback    — QoS loop adapting the sampling fraction to SLOs
+  windows     — tumbling count/time windows
+  pipeline    — Algorithm 2: edge sample -> collective -> cloud estimate
+"""
+
+from . import estimators, feedback, geohash, routing, sampling, stratify, windows
+from .estimators import Estimate, StratumStats, estimate, merge_stats, psum_stats, sample_stats
+from .feedback import SLO, ControllerState
+from .pipeline import EdgeCloudPipeline, PipelineConfig, WindowResult, edge_sample
+from .routing import RoutePlan, balanced_plan, contiguous_plan
+from .sampling import SampleResult, compact, edgesos
+from .stratify import CHICAGO_BBOX, SHENZHEN_BBOX, StratumTable, make_table, make_table_from_codes
+
+__all__ = [
+    "CHICAGO_BBOX",
+    "ControllerState",
+    "EdgeCloudPipeline",
+    "Estimate",
+    "PipelineConfig",
+    "RoutePlan",
+    "SHENZHEN_BBOX",
+    "SLO",
+    "SampleResult",
+    "StratumStats",
+    "StratumTable",
+    "WindowResult",
+    "balanced_plan",
+    "compact",
+    "contiguous_plan",
+    "edge_sample",
+    "edgesos",
+    "estimate",
+    "estimators",
+    "feedback",
+    "geohash",
+    "make_table",
+    "make_table_from_codes",
+    "merge_stats",
+    "psum_stats",
+    "routing",
+    "sample_stats",
+    "sampling",
+    "stratify",
+    "windows",
+]

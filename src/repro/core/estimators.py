@@ -1,0 +1,197 @@
+"""Stratified estimators with rigorous error bounds (paper §3.5–3.6).
+
+Implements equations (1)–(10): per-stratum sample statistics, the
+stratified SUM/MEAN estimators, the variance of those estimators with
+finite-population correction, and normal-approximation confidence
+intervals / margin of error / relative error.
+
+Two aggregation modes mirror the paper's two edge->cloud transmission modes:
+
+  * raw mode — the "cloud" groups raw sampled tuples by stratum and applies
+    the formulas on the full (masked) arrays;
+  * pre-aggregated mode — each edge shard reduces its window to per-stratum
+    moments ``(n_k, sum_k, M2_k)`` and only those are combined across shards
+    (``psum`` over the data axes).  This is the bandwidth-saving mode; the
+    combination rule is exact (parallel-variance / Chan et al. decomposition),
+    so both modes return identical estimates — a property we test.
+
+Numerics: per-stratum second moments are computed *centered* (two-pass)
+inside a shard, and the cross-shard merge uses the mean-shift decomposition,
+avoiding the catastrophic cancellation of naive sum-of-squares in f32.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import ndtri
+
+
+class StratumStats(NamedTuple):
+    """Mergeable per-stratum sample moments; shapes all (S+1,).
+
+    n: realized sample size n_k (float for psum-friendliness)
+    total: population size N_k of the window(s)
+    wsum:  Σ y over sampled tuples of stratum k
+    m2:    Σ (y - ȳ_k)^2 over sampled tuples (centered second moment)
+    mean:  ȳ_k (carried so merges can re-center without re-reading data)
+    """
+
+    n: jnp.ndarray
+    total: jnp.ndarray
+    wsum: jnp.ndarray
+    m2: jnp.ndarray
+    mean: jnp.ndarray
+
+
+class Estimate(NamedTuple):
+    """Global stratified estimate with uncertainty (eqs 5–10)."""
+
+    sum: jnp.ndarray
+    mean: jnp.ndarray
+    var_sum: jnp.ndarray
+    var_mean: jnp.ndarray
+    moe: jnp.ndarray
+    relative_error: jnp.ndarray
+    ci_low: jnp.ndarray
+    ci_high: jnp.ndarray
+    n_total: jnp.ndarray
+    population: jnp.ndarray
+
+
+def sample_stats(
+    values: jnp.ndarray,
+    stratum_idx: jnp.ndarray,
+    mask: jnp.ndarray,
+    num_slots: int,
+    counts: jnp.ndarray | None = None,
+) -> StratumStats:
+    """Per-stratum moments of the *sampled* tuples (eq 4), two-pass centered.
+
+    ``counts`` are the population sizes N_k; when None they are recomputed
+    from ``stratum_idx`` (all tuples of the window, sampled or not).
+    """
+    values = values.astype(jnp.float32)
+    m = mask.astype(jnp.float32)
+    if counts is None:
+        counts = jax.ops.segment_sum(
+            jnp.ones_like(stratum_idx, dtype=jnp.int32), stratum_idx, num_segments=num_slots
+        )
+    n = jax.ops.segment_sum(m, stratum_idx, num_segments=num_slots)
+    wsum = jax.ops.segment_sum(m * values, stratum_idx, num_segments=num_slots)
+    mean = jnp.where(n > 0, wsum / jnp.maximum(n, 1.0), 0.0)
+    centered = values - mean[stratum_idx]
+    m2 = jax.ops.segment_sum(m * centered * centered, stratum_idx, num_segments=num_slots)
+    return StratumStats(n=n, total=counts.astype(jnp.float32), wsum=wsum, m2=m2, mean=mean)
+
+
+def merge_stats(a: StratumStats, b: StratumStats) -> StratumStats:
+    """Exact pairwise merge (Chan et al. parallel-variance update)."""
+    n = a.n + b.n
+    total = a.total + b.total
+    wsum = a.wsum + b.wsum
+    mean = jnp.where(n > 0, wsum / jnp.maximum(n, 1.0), 0.0)
+    delta = b.mean - a.mean
+    m2 = a.m2 + b.m2 + delta * delta * jnp.where(n > 0, a.n * b.n / jnp.maximum(n, 1.0), 0.0)
+    return StratumStats(n=n, total=total, wsum=wsum, m2=m2, mean=mean)
+
+
+def merge_all(stats: Sequence[StratumStats]) -> StratumStats:
+    out = stats[0]
+    for s in stats[1:]:
+        out = merge_stats(out, s)
+    return out
+
+
+def psum_stats(stats: StratumStats, axis_names) -> StratumStats:
+    """Cross-shard combine with a single additive collective.
+
+    Uses the mean-shift decomposition
+        M2_g = Σ_s M2_s + Σ_s n_s ȳ_s² − n_g ȳ_g²
+    so one ``psum`` of 4 (S+1)-vectors suffices — this is the paper's
+    "pre-aggregated statistics transmission" mapped onto the interconnect:
+    collective bytes are O(S), independent of window size.
+    """
+    n = jax.lax.psum(stats.n, axis_names)
+    total = jax.lax.psum(stats.total, axis_names)
+    wsum = jax.lax.psum(stats.wsum, axis_names)
+    raw2 = jax.lax.psum(stats.m2 + stats.n * stats.mean * stats.mean, axis_names)
+    mean = jnp.where(n > 0, wsum / jnp.maximum(n, 1.0), 0.0)
+    m2 = jnp.maximum(raw2 - n * mean * mean, 0.0)
+    return StratumStats(n=n, total=total, wsum=wsum, m2=m2, mean=mean)
+
+
+def z_value(confidence: float) -> jnp.ndarray:
+    """Upper alpha/2 normal quantile, e.g. 1.96 for 95%."""
+    alpha = 1.0 - confidence
+    return ndtri(1.0 - alpha / 2.0).astype(jnp.float32)
+
+
+def estimate(stats: StratumStats, confidence: float = 0.95) -> Estimate:
+    """Equations (5)–(10) from merged per-stratum statistics.
+
+    The MEAN is normalized by the *covered* population Σ_{k: n_k>0} N_k
+    (a ratio estimator): strata whose allocation rounded to zero samples
+    (tiny N_k at low fractions — the paper's "neighborhoods with too few
+    data points" caveat) would otherwise bias the mean toward zero.  Under
+    full coverage this equals the textbook eq 5 exactly.
+    """
+    n = stats.n
+    N = stats.total
+    active = (n > 0) & (N > 0)
+    mean_k = stats.mean
+    # s_k^2 (eq 4); needs n_k >= 2, else contributes zero variance but we
+    # keep full-population strata exact via the fpc term anyway.
+    s2_k = jnp.where(n > 1, stats.m2 / jnp.maximum(n - 1.0, 1.0), 0.0)
+    sum_hat = jnp.sum(jnp.where(active, N * mean_k, 0.0))  # eq 5
+    population = jnp.sum(N)
+    covered = jnp.sum(jnp.where(active, N, 0.0))
+    mean_hat = sum_hat / jnp.maximum(covered, 1.0)  # eq 5 (ratio form)
+    fpc = jnp.where(N > 0, 1.0 - n / jnp.maximum(N, 1.0), 0.0)
+    var_sum = jnp.sum(jnp.where(active, N * N * fpc * s2_k / jnp.maximum(n, 1.0), 0.0))  # eq 6
+    var_mean = var_sum / jnp.maximum(covered, 1.0) ** 2  # eq 7
+    z = z_value(confidence)
+    moe = z * jnp.sqrt(jnp.maximum(var_mean, 0.0))  # eq 9
+    rel = jnp.where(jnp.abs(mean_hat) > 0, moe / jnp.maximum(jnp.abs(mean_hat), 1e-30), jnp.inf)  # eq 10
+    return Estimate(
+        sum=sum_hat,
+        mean=mean_hat,
+        var_sum=var_sum,
+        var_mean=var_mean,
+        moe=moe,
+        relative_error=rel,
+        ci_low=mean_hat - moe,
+        ci_high=mean_hat + moe,
+        n_total=jnp.sum(n),
+        population=population,
+    )
+
+
+def substream_sums(stats_per_substream: Sequence[StratumStats]) -> jnp.ndarray:
+    """Equations (1)–(2): per-substream estimated sums t̂_s and their total.
+
+    Each element is one edge node's local stats; t̂_s = Σ_k N_{s,k} ȳ_{s,k}.
+    Returns the vector of t̂_s (the global SUM is their sum, eq 2 — equal to
+    ``estimate(merge_all(...)).sum`` when strata don't overlap; when they do,
+    the weighted form of eq 3 is what merge_all computes).
+    """
+    return jnp.stack([jnp.sum(s.total * s.mean) for s in stats_per_substream])
+
+
+def per_stratum_means(stats: StratumStats, confidence: float = 0.95):
+    """Per-stratum mean and CI half-width (for heatmaps / per-cell queries)."""
+    s2_k = jnp.where(stats.n > 1, stats.m2 / jnp.maximum(stats.n - 1.0, 1.0), 0.0)
+    fpc = jnp.where(stats.total > 0, 1.0 - stats.n / jnp.maximum(stats.total, 1.0), 0.0)
+    var_k = jnp.where(stats.n > 0, fpc * s2_k / jnp.maximum(stats.n, 1.0), jnp.inf)
+    moe_k = z_value(confidence) * jnp.sqrt(jnp.maximum(var_k, 0.0))
+    return stats.mean, moe_k
+
+
+def weighted_estimate(
+    values: jnp.ndarray, weight: jnp.ndarray, population: jnp.ndarray
+) -> jnp.ndarray:
+    """Horvitz-Thompson mean from (value, weight) pairs — one-liner used by
+    the LM training integration (weights from SampleResult)."""
+    return jnp.sum(values * weight) / jnp.maximum(population, 1.0)

@@ -1,0 +1,101 @@
+"""QoS feedback loop: adapt the sampling fraction to SLOs (paper §3.4/3.6.4).
+
+The paper's loop: if observed relative error (RE) exceeds the continuous
+query's SLO, raise the sampling fraction for subsequent windows; a cost
+function also maps a latency budget to a fraction ceiling.
+
+We implement an *analytic* controller instead of a fixed-step heuristic.
+Under proportional allocation, Var(MEAN) ≈ ((1-f)/f) * V / N where
+V = Σ W_k s_k² is (approximately) fraction-independent.  Hence
+RE² ∝ (1-f)/f, and the fraction that exactly meets a target RE_t from an
+observation (f, RE) is
+
+    (1-f')/f' = (RE_t / RE)² (1-f)/f   =>   f' = 1 / (1 + r·(1-f)/f)
+
+with r = (RE_t/RE)².  An EMA on RE plus min/max clamps give stability; a
+token-budget ceiling implements the latency half of the SLO (EdgeSOS cost is
+dominated by window size, not kept fraction — paper §5.2.2 — so latency maps
+to a ceiling on *downstream* volume f·N, not on sampling cost).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SLO:
+    """Continuous-query service level objectives."""
+
+    target_relative_error: float = 0.10
+    max_downstream_tuples: int | None = None  # latency budget proxy
+    min_fraction: float = 0.05
+    max_fraction: float = 1.0
+    ema: float = 0.5  # smoothing on observed RE
+    deadband: float = 0.05  # relative deadband around the target
+
+
+class ControllerState(NamedTuple):
+    fraction: jnp.ndarray  # current sampling fraction (scalar f32)
+    re_ema: jnp.ndarray  # smoothed observed relative error
+    steps: jnp.ndarray  # windows processed
+
+
+def init_state(fraction: float = 0.8) -> ControllerState:
+    return ControllerState(
+        fraction=jnp.float32(fraction),
+        re_ema=jnp.float32(0.0),
+        steps=jnp.int32(0),
+    )
+
+
+def update(
+    state: ControllerState,
+    observed_re: jnp.ndarray,
+    window_size: jnp.ndarray,
+    slo: SLO,
+) -> ControllerState:
+    """One controller step after a window's estimate is produced."""
+    re = jnp.where(jnp.isfinite(observed_re), observed_re, slo.target_relative_error)
+    re_ema = jnp.where(
+        state.steps == 0, re, slo.ema * re + (1.0 - slo.ema) * state.re_ema
+    )
+    f = state.fraction
+    tgt = jnp.float32(slo.target_relative_error)
+    r = jnp.square(tgt / jnp.maximum(re_ema, 1e-9))
+    odds = (1.0 - f) / jnp.maximum(f, 1e-6)
+    f_new = 1.0 / (1.0 + r * odds)
+    # deadband: don't thrash when RE is already within ±deadband of target
+    in_band = jnp.abs(re_ema - tgt) <= slo.deadband * tgt
+    f_new = jnp.where(in_band, f, f_new)
+    # latency budget: cap downstream volume f·N
+    if slo.max_downstream_tuples is not None:
+        f_cap = jnp.float32(slo.max_downstream_tuples) / jnp.maximum(
+            window_size.astype(jnp.float32), 1.0
+        )
+        f_new = jnp.minimum(f_new, f_cap)
+    f_new = jnp.clip(f_new, slo.min_fraction, slo.max_fraction)
+    return ControllerState(fraction=f_new, re_ema=re_ema, steps=state.steps + 1)
+
+
+def fraction_for_target(
+    variance_per_unit: jnp.ndarray,
+    population: jnp.ndarray,
+    mean: jnp.ndarray,
+    slo: SLO,
+    z: float = 1.96,
+) -> jnp.ndarray:
+    """Feed-forward solve (paper's ``fractionCalc``): the fraction whose
+    predicted RE equals the target, given V = Σ W_k s_k² estimates.
+
+        RE² = z² ((1-f)/f) V / (N mean²)  =>  f = 1 / (1 + N (RE_t mean / z)² / V)
+    """
+    tgt = slo.target_relative_error
+    denom = jnp.maximum(variance_per_unit, 1e-30)
+    a = population * jnp.square(tgt * mean / z) / denom
+    f = 1.0 / (1.0 + a)
+    return jnp.clip(f, slo.min_fraction, slo.max_fraction)

@@ -1,0 +1,211 @@
+"""EdgeApproxGeo end-to-end workflow (paper Algorithm 2).
+
+Edge tier  = the mesh shards along the data axes: each shard independently
+             stratifies + samples its local window (EdgeSOS — no cross-shard
+             communication in the sampling path).
+Cloud tier = the post-collective computation: stratified estimators with
+             error bounds, plus the QoS feedback controller.
+
+Two transmission modes (paper §3.6.4), chosen per query:
+  * 'preagg' — shards reduce to per-stratum moments, one psum of O(S)
+    floats crosses the interconnect.  This is the default and the paper's
+    bandwidth-saving mode.
+  * 'raw'    — shards compact kept tuples into a padded buffer and
+    all-gather it (the "ship sampled raw tuples" mode).  Collective bytes
+    scale with the kept sample, not with strata.
+
+Both modes produce identical estimates for the same sample (tested).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import estimators, feedback, sampling
+from .estimators import Estimate, StratumStats
+from .sampling import SampleResult
+from .stratify import StratumTable
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    method: str = "srs"  # srs | bernoulli | neyman
+    mode: str = "preagg"  # preagg | raw
+    confidence: float = 0.95
+    raw_capacity: int | None = None  # static per-shard buffer for raw mode
+
+
+class WindowResult(NamedTuple):
+    estimate: Estimate
+    stats: StratumStats
+    n_sampled: jnp.ndarray
+    n_valid: jnp.ndarray
+    n_overflow: jnp.ndarray  # tuples outside the region of interest
+    comm_bytes: jnp.ndarray  # analytic edge->cloud payload size of this mode
+
+
+def _zero_overflow(stats: StratumStats) -> StratumStats:
+    """Remove the out-of-region slot from estimation (kept in aux only)."""
+    keep = jnp.arange(stats.n.shape[0]) < (stats.n.shape[0] - 1)
+
+    def z(x):
+        return jnp.where(keep, x, 0.0)
+
+    return StratumStats(n=z(stats.n), total=z(stats.total), wsum=z(stats.wsum), m2=z(stats.m2), mean=z(stats.mean))
+
+
+def edge_sample(
+    key,
+    table: StratumTable,
+    lat: jnp.ndarray,
+    lon: jnp.ndarray,
+    valid: jnp.ndarray,
+    fraction,
+    method: str,
+    stddev: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, SampleResult]:
+    """Edge-local half of Algorithm 2: stratify + EdgeSOS sample."""
+    sidx = table.assign(lat, lon)
+    sidx = jnp.where(valid, sidx, table.num_strata)  # padding -> overflow
+    result = sampling.edgesos(
+        key, sidx, table.num_slots, fraction, method=method, stddev=stddev
+    )
+    mask = result.mask & valid
+    weight = jnp.where(valid, result.weight, 0.0)
+    # population counts must also exclude padding
+    counts = jax.ops.segment_sum(
+        valid.astype(jnp.int32), sidx, num_segments=table.num_slots
+    )
+    n_k = jax.ops.segment_sum(mask.astype(jnp.int32), sidx, num_segments=table.num_slots)
+    return sidx, SampleResult(mask=mask, weight=weight, n_k=n_k, counts=counts)
+
+
+class EdgeCloudPipeline:
+    """Single-program pipeline; optionally distributed over mesh data axes."""
+
+    def __init__(
+        self,
+        table: StratumTable,
+        config: PipelineConfig = PipelineConfig(),
+        mesh=None,
+        axis_names: tuple[str, ...] = ("data",),
+    ):
+        self.table = table
+        self.config = config
+        self.mesh = mesh
+        self.axis_names = axis_names
+        if mesh is not None:
+            self._sharded = self._build_sharded()
+
+    # -- single-shard ("one edge node") path --------------------------------
+
+    @partial(jax.jit, static_argnums=(0,))
+    def process_window(self, key, lat, lon, value, valid, fraction) -> WindowResult:
+        table, cfg = self.table, self.config
+        sidx, sample = edge_sample(key, table, lat, lon, valid, fraction, cfg.method)
+        stats = estimators.sample_stats(
+            value, sidx, sample.mask, table.num_slots, counts=sample.counts
+        )
+        est_stats = _zero_overflow(stats)
+        est = estimators.estimate(est_stats, cfg.confidence)
+        comm = jnp.int32(4 * 4 * table.num_slots)  # preagg payload (bytes)
+        return WindowResult(
+            estimate=est,
+            stats=stats,
+            n_sampled=jnp.sum(sample.mask.astype(jnp.int32)),
+            n_valid=jnp.sum(valid.astype(jnp.int32)),
+            n_overflow=sample.counts[-1],
+            comm_bytes=comm,
+        )
+
+    # -- distributed path ----------------------------------------------------
+
+    def _build_sharded(self):
+        table, cfg, axes = self.table, self.config, self.axis_names
+        spec = P(axes)
+
+        def shard_fn(key, lat, lon, value, valid, fraction):
+            # per-shard independent PRNG: fold in the shard's linear index
+            idx = jax.lax.axis_index(axes)
+            key = jax.random.fold_in(key, idx)
+            sidx, sample = edge_sample(key, table, lat, lon, valid, fraction, cfg.method)
+            if cfg.mode == "preagg":
+                local = estimators.sample_stats(
+                    value, sidx, sample.mask, table.num_slots, counts=sample.counts
+                )
+                stats = estimators.psum_stats(local, axes)
+                comm = jnp.int32(4 * 4 * table.num_slots)
+            else:
+                cap = cfg.raw_capacity or lat.shape[0]
+                v_ok, v_sidx, v_val = sampling.compact(sample.mask, cap, sidx, value)
+                g_ok = jax.lax.all_gather(v_ok, axes, tiled=True)
+                g_sidx = jax.lax.all_gather(v_sidx, axes, tiled=True)
+                g_val = jax.lax.all_gather(v_val, axes, tiled=True)
+                counts = jax.lax.psum(sample.counts, axes)
+                stats = estimators.sample_stats(
+                    g_val, g_sidx, g_ok, table.num_slots, counts=counts
+                )
+                comm = jnp.int32(cap * (4 + 4 + 1))
+            est = estimators.estimate(_zero_overflow(stats), cfg.confidence)
+            return WindowResult(
+                estimate=est,
+                stats=stats,
+                n_sampled=jax.lax.psum(jnp.sum(sample.mask.astype(jnp.int32)), axes),
+                n_valid=jax.lax.psum(jnp.sum(valid.astype(jnp.int32)), axes),
+                n_overflow=jax.lax.psum(sample.counts[-1], axes),
+                comm_bytes=comm,
+            )
+
+        mapped = jax.shard_map(
+            shard_fn,
+            mesh=self.mesh,
+            in_specs=(P(), spec, spec, spec, spec, P()),
+            out_specs=jax.tree.map(lambda _: P(), WindowResult(
+                estimate=Estimate(*(0,) * 10), stats=StratumStats(*(0,) * 5),
+                n_sampled=0, n_valid=0, n_overflow=0, comm_bytes=0)),
+            check_vma=False,
+        )
+        return jax.jit(mapped)
+
+    def process_window_sharded(self, key, lat, lon, value, valid, fraction) -> WindowResult:
+        if self.mesh is None:
+            raise ValueError("pipeline constructed without a mesh")
+        return self._sharded(key, lat, lon, value, valid, jnp.float32(fraction))
+
+    # -- continuous query loop (Algorithm 2) ---------------------------------
+
+    def run_stream(
+        self,
+        windows,
+        slo: feedback.SLO | None = None,
+        initial_fraction: float = 0.8,
+        key=None,
+        sharded: bool = False,
+    ):
+        """Process a stream of WindowBatch under the QoS feedback loop."""
+        slo = slo or feedback.SLO()
+        key = key if key is not None else jax.random.key(0)
+        state = feedback.init_state(initial_fraction)
+        history = []
+        for i, w in enumerate(windows):
+            key, sub = jax.random.split(key)
+            fn = self.process_window_sharded if sharded else self.process_window
+            res = fn(
+                sub,
+                jnp.asarray(w.lat, jnp.float32),
+                jnp.asarray(w.lon, jnp.float32),
+                jnp.asarray(w.value, jnp.float32),
+                jnp.asarray(w.valid),
+                state.fraction,
+            )
+            state = feedback.update(state, res.estimate.relative_error, res.n_valid, slo)
+            history.append((res, float(state.fraction)))
+        return history, state

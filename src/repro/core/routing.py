@@ -1,0 +1,153 @@
+"""Spatial-aware data distribution (paper contribution #2).
+
+The paper creates one Kafka topic per *neighborhood* (coarse geohash) so
+that Spark executors receive pre-partitioned data and aggregation needs no
+shuffle.  JAX mapping: "topics" become mesh shards; the router is a static
+``neighborhood -> shard`` plan, and the "publish" step is a deterministic
+all_to_all exchange (or, in pre-aggregated mode, nothing at all — partial
+stats psum directly).
+
+The measurable claim carried over from the paper: with spatial routing the
+cloud-side aggregation is shuffle-free (collective bytes O(S) instead of
+O(window)), which shows up directly in the dry-run collective-byte counts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .stratify import StratumTable
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class RoutePlan:
+    """Static routing plan: which shard owns each neighborhood/stratum.
+
+    dest_of_neighborhood: (num_neighborhoods + 1,) int32 (last = overflow).
+    dest_of_stratum: (S + 1,) int32 — composed through the stratum table's
+      O(1) neighborhood gather so the hot path is a single index lookup.
+    num_shards: static shard count on the consumer ("cloud") side.
+    """
+
+    dest_of_neighborhood: jnp.ndarray
+    dest_of_stratum: jnp.ndarray
+    num_shards: int = dataclasses.field(metadata=dict(static=True))
+
+    def route_stratum(self, stratum_idx: jnp.ndarray) -> jnp.ndarray:
+        return self.dest_of_stratum[stratum_idx]
+
+
+def contiguous_plan(table: StratumTable, num_shards: int) -> RoutePlan:
+    """Assign spatially-contiguous neighborhood ranges to shards.
+
+    Geohash/Morton order is locality preserving, so contiguous ranges of
+    neighborhood ids are spatially coherent — the analogue of the paper's
+    "each neighborhood is served by one edge node".
+    """
+    nn = table.num_neighborhoods + 1
+    ids = np.arange(nn, dtype=np.int64)
+    dest_n = ((ids * num_shards) // nn).astype(np.int32)
+    dest_s = dest_n[np.asarray(table.neighborhood)]
+    return RoutePlan(
+        dest_of_neighborhood=jnp.asarray(dest_n),
+        dest_of_stratum=jnp.asarray(dest_s),
+        num_shards=num_shards,
+    )
+
+
+def balanced_plan(
+    table: StratumTable, num_shards: int, load_per_neighborhood: np.ndarray
+) -> RoutePlan:
+    """Greedy load-balanced plan from observed per-neighborhood loads.
+
+    Beyond-paper: the paper assumes one neighborhood per edge node; at pod
+    scale neighborhood loads are highly skewed (Zipf-like city density), so
+    we pack neighborhoods onto shards longest-processing-time-first.
+    """
+    nn = table.num_neighborhoods + 1
+    load = np.zeros(nn, dtype=np.float64)
+    load[: len(load_per_neighborhood)] = np.asarray(load_per_neighborhood, dtype=np.float64)[:nn]
+    order = np.argsort(-load)
+    shard_load = np.zeros(num_shards, dtype=np.float64)
+    dest_n = np.zeros(nn, dtype=np.int32)
+    for nb in order:
+        tgt = int(np.argmin(shard_load))
+        dest_n[nb] = tgt
+        shard_load[tgt] += load[nb]
+    dest_s = dest_n[np.asarray(table.neighborhood)]
+    return RoutePlan(
+        dest_of_neighborhood=jnp.asarray(dest_n),
+        dest_of_stratum=jnp.asarray(dest_s),
+        num_shards=num_shards,
+    )
+
+
+def route_counts(plan: RoutePlan, stratum_idx: jnp.ndarray) -> jnp.ndarray:
+    """Per-destination tuple counts for one window (load/collective model)."""
+    dest = plan.route_stratum(stratum_idx)
+    return jax.ops.segment_sum(
+        jnp.ones_like(dest, dtype=jnp.int32), dest, num_segments=plan.num_shards
+    )
+
+
+def exchange(
+    plan: RoutePlan,
+    stratum_idx: jnp.ndarray,
+    payload: jnp.ndarray,
+    axis_name: str,
+    capacity: int,
+):
+    """Deterministic routed exchange under shard_map (the "publish" step).
+
+    Each shard sorts its kept tuples by destination, pads each destination
+    slice to ``capacity`` and performs one all_to_all.  Returns
+    (valid, stratum_idx_rx, payload_rx) with leading dim
+    ``num_shards * capacity`` on every shard.  Tuples beyond capacity are
+    dropped and counted (the paper's Kafka producer has the same bounded
+    -buffer semantics); choose capacity from route_counts percentiles.
+    """
+    num_shards = plan.num_shards
+    dest = plan.route_stratum(stratum_idx)
+    order = jnp.argsort(dest, stable=True)
+    dest_sorted = dest[order]
+    s_sorted = stratum_idx[order]
+    p_sorted = payload[order]
+    counts = jax.ops.segment_sum(
+        jnp.ones_like(dest, dtype=jnp.int32), dest, num_segments=num_shards
+    )
+    starts = jnp.cumsum(counts) - counts
+    # position of each sorted tuple inside its destination block; tuples
+    # beyond capacity scatter into a dump slot (never into real slots)
+    pos_in_dest = jnp.arange(dest.shape[0], dtype=jnp.int32) - starts[dest_sorted]
+    keep = pos_in_dest < capacity
+    slot = jnp.where(
+        keep, dest_sorted * capacity + pos_in_dest, num_shards * capacity
+    )
+    buf_s = jnp.full((num_shards * capacity + 1,), -1, dtype=s_sorted.dtype)
+    buf_p = jnp.zeros((num_shards * capacity + 1,) + p_sorted.shape[1:], p_sorted.dtype)
+    buf_s = buf_s.at[slot].set(s_sorted, mode="drop")
+    buf_p = buf_p.at[slot].set(p_sorted, mode="drop")
+    buf_s = buf_s[:-1]
+    buf_p = buf_p[:-1]
+    valid = buf_s >= 0
+    dropped = jnp.sum(jnp.maximum(counts - capacity, 0))
+    # one all_to_all moves each destination block to its owner shard
+    rx_s = jax.lax.all_to_all(
+        buf_s.reshape(num_shards, capacity), axis_name, split_axis=0, concat_axis=0
+    ).reshape(-1)
+    rx_p = jax.lax.all_to_all(
+        buf_p.reshape((num_shards, capacity) + buf_p.shape[1:]),
+        axis_name,
+        split_axis=0,
+        concat_axis=0,
+    ).reshape((-1,) + buf_p.shape[2:])
+    rx_valid = jax.lax.all_to_all(
+        valid.reshape(num_shards, capacity), axis_name, split_axis=0, concat_axis=0
+    ).reshape(-1)
+    return rx_valid, rx_s, rx_p, dropped

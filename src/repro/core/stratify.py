@@ -1,0 +1,143 @@
+"""Stratum tables: the spatial model of the paper.
+
+The area of interest is a regular grid of geohash cells ("strata").  The
+paper's edge binary maps each tuple's geohash to a stratum and to a coarser
+"neighborhood" via a precomputed inverted hashmap (O(1) FxHash lookup).
+
+TPU adaptation: hash maps don't vectorize; we keep a *sorted* table of cell
+codes and resolve membership with ``searchsorted`` (O(log S), fully
+vectorized, MXU/VPU friendly), then express neighborhood lookup as a dense
+O(1) gather from a precomputed ``stratum -> neighborhood`` int array — the
+moral equivalent of the paper's inverted map, laid out for SIMD.
+
+Out-of-region tuples map to a dedicated overflow stratum (index ``S``), so
+every downstream segment op uses the static size ``S + 1``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from . import geohash
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class StratumTable:
+    """Static table of geohash strata covering a region of interest.
+
+    Attributes:
+      codes: (S,) uint64, sorted geohash codes of the in-region cells.
+      neighborhood: (S + 1,) int32, neighborhood id per stratum; the final
+        entry is the overflow stratum's neighborhood (``num_neighborhoods``,
+        i.e. its own catch-all).
+      precision: geohash precision of the strata (static).
+      neighborhood_precision: coarser precision defining neighborhoods.
+      num_neighborhoods: static count of distinct in-region neighborhoods.
+    """
+
+    codes: jnp.ndarray
+    neighborhood: jnp.ndarray
+    precision: int = dataclasses.field(metadata=dict(static=True))
+    neighborhood_precision: int = dataclasses.field(metadata=dict(static=True))
+    num_neighborhoods: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def num_strata(self) -> int:
+        return int(self.codes.shape[0])
+
+    @property
+    def num_slots(self) -> int:
+        """Strata + 1 overflow slot; the static segment count downstream."""
+        return self.num_strata + 1
+
+    def lookup(self, codes: jnp.ndarray) -> jnp.ndarray:
+        """Map geohash codes -> stratum index in [0, S]; S = out-of-region."""
+        idx = jnp.searchsorted(self.codes, codes)
+        idx = jnp.clip(idx, 0, self.num_strata - 1)
+        hit = self.codes[idx] == codes
+        return jnp.where(hit, idx, self.num_strata).astype(jnp.int32)
+
+    def assign(self, lat: jnp.ndarray, lon: jnp.ndarray) -> jnp.ndarray:
+        """Coordinates -> stratum index (encode + table lookup)."""
+        return self.lookup(geohash.encode(lat, lon, self.precision))
+
+    def neighborhood_of(self, stratum_idx: jnp.ndarray) -> jnp.ndarray:
+        """O(1) gather: stratum index -> neighborhood id."""
+        return self.neighborhood[stratum_idx]
+
+
+def make_table(
+    lat_range: tuple[float, float],
+    lon_range: tuple[float, float],
+    precision: int,
+    neighborhood_precision: int | None = None,
+) -> StratumTable:
+    """Enumerate the geohash cells covering a bounding box (host side).
+
+    This is the paper's "area of interest divided into a regular grid of
+    fixed-sized adjacent non-overlapping cells".  Built once at launch, then
+    used read-only on device.
+    """
+    if neighborhood_precision is None:
+        neighborhood_precision = max(1, precision - 2)
+    if neighborhood_precision > precision:
+        raise ValueError("neighborhood_precision must be <= precision")
+    lat_lo, lat_hi = lat_range
+    lon_lo, lon_hi = lon_range
+    lon_bits, lat_bits = geohash.split_bits(precision)
+    lat_cell = (geohash.LAT_MAX - geohash.LAT_MIN) / (1 << lat_bits)
+    lon_cell = (geohash.LON_MAX - geohash.LON_MIN) / (1 << lon_bits)
+    lat_i0 = int(np.floor((lat_lo - geohash.LAT_MIN) / lat_cell))
+    lat_i1 = int(np.floor((lat_hi - geohash.LAT_MIN) / lat_cell - 1e-12))
+    lon_i0 = int(np.floor((lon_lo - geohash.LON_MIN) / lon_cell))
+    lon_i1 = int(np.floor((lon_hi - geohash.LON_MIN) / lon_cell - 1e-12))
+    lat_idx = np.arange(lat_i0, lat_i1 + 1, dtype=np.uint32)
+    lon_idx = np.arange(lon_i0, lon_i1 + 1, dtype=np.uint32)
+    lon_grid, lat_grid = np.meshgrid(lon_idx, lat_idx)
+    codes = np.asarray(
+        geohash.interleave(jnp.asarray(lon_grid.reshape(-1)), jnp.asarray(lat_grid.reshape(-1)), precision)
+    )
+    codes = np.sort(codes.astype(np.uint32))
+    parents = np.asarray(geohash.parent(jnp.asarray(codes), precision, neighborhood_precision))
+    uniq, inv = np.unique(parents, return_inverse=True)
+    neighborhood = np.concatenate([inv.astype(np.int32), np.array([len(uniq)], dtype=np.int32)])
+    return StratumTable(
+        codes=jnp.asarray(codes),
+        neighborhood=jnp.asarray(neighborhood),
+        precision=precision,
+        neighborhood_precision=neighborhood_precision,
+        num_neighborhoods=int(len(uniq)),
+    )
+
+
+def make_table_from_codes(
+    codes: Sequence[int] | np.ndarray,
+    precision: int,
+    neighborhood_precision: int | None = None,
+) -> StratumTable:
+    """Build a table from an explicit set of geohash codes (e.g. observed)."""
+    if neighborhood_precision is None:
+        neighborhood_precision = max(1, precision - 2)
+    codes = np.unique(np.asarray(codes, dtype=np.uint32))
+    parents = np.asarray(geohash.parent(jnp.asarray(codes), precision, neighborhood_precision))
+    uniq, inv = np.unique(parents, return_inverse=True)
+    neighborhood = np.concatenate([inv.astype(np.int32), np.array([len(uniq)], dtype=np.int32)])
+    return StratumTable(
+        codes=jnp.asarray(codes),
+        neighborhood=jnp.asarray(neighborhood),
+        precision=precision,
+        neighborhood_precision=neighborhood_precision,
+        num_neighborhoods=int(len(uniq)),
+    )
+
+
+# Bounding boxes used across examples/benchmarks (approximate city extents).
+SHENZHEN_BBOX = ((22.44, 22.87), (113.75, 114.65))
+CHICAGO_BBOX = ((41.62, 42.05), (-87.95, -87.50))

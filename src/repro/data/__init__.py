@@ -1,0 +1,6 @@
+"""Data substrate: synthetic geo-referenced streams + LM token streams."""
+
+from .streams import chicago_aq_stream, shenzhen_taxi_stream
+from .tokens import StratifiedTokenStream
+
+__all__ = ["chicago_aq_stream", "shenzhen_taxi_stream", "StratifiedTokenStream"]

@@ -1,0 +1,71 @@
+"""EdgeSOS-sampled training batches: the paper's data plane feeding the LM.
+
+Each incoming window of sequences (tagged with a data stratum) is
+stratified-sampled at the current QoS fraction; kept sequences compact
+into a fixed-size training batch with Horvitz-Thompson weights so the
+weighted loss is an unbiased estimate of the full-stream loss (paper eq 3
+applied to the loss), and per-stratum counts ride along for the
+error-bound telemetry (eqs 5-10).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..core import sampling
+from ..models.transformer import Batch
+from .tokens import TokenBatch
+
+
+def edgesos_batch(
+    key,
+    window: TokenBatch,
+    fraction: float,
+    num_strata: int,
+    out_batch: int,
+    method: str = "srs",
+) -> Batch:
+    """Sample a window of sequences down to a fixed ``out_batch``.
+
+    Kept sequences are compacted to the front; unfilled slots carry zero
+    weight (masked out of the loss and the telemetry).
+    """
+    ns = num_strata + 1
+    sidx = jnp.asarray(window.stratum, jnp.int32)
+    res = sampling.edgesos(key, sidx, ns, fraction, method=method)
+    valid, toks, tgts, strat, w = sampling.compact(
+        res.mask,
+        out_batch,
+        jnp.asarray(window.tokens),
+        jnp.asarray(window.targets),
+        sidx,
+        res.weight * jnp.asarray(window.weight),
+    )
+    B, L = toks.shape
+    positions = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L))
+    return Batch(
+        tokens=toks,
+        targets=jnp.where(valid[:, None], tgts, -1),
+        positions=positions,
+        seq_weight=jnp.where(valid, w, 0.0),
+        stratum=jnp.where(valid, strat, num_strata),
+        stratum_counts=res.counts,
+    )
+
+
+def full_batch(window: TokenBatch, num_strata: int) -> Batch:
+    """Unsampled batch (fraction = 1 baseline)."""
+    sidx = jnp.asarray(window.stratum, jnp.int32)
+    counts = sampling.stratum_counts(sidx, num_strata + 1)
+    B, L = window.tokens.shape
+    return Batch(
+        tokens=jnp.asarray(window.tokens),
+        targets=jnp.asarray(window.targets),
+        positions=jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L)),
+        seq_weight=jnp.asarray(window.weight),
+        stratum=sidx,
+        stratum_counts=counts,
+    )

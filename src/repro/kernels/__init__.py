@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for the compute hot-spots the paper optimizes.
+
+The paper's edge binary optimizes (a) geohash computation + neighborhood
+lookup and (b) parallel per-stratum grouping/sampling — its rayon/FxHash
+hot loop.  On TPU those become:
+
+  geohash/          fused quantize + Morton interleave (VPU integer)
+  stratified_stats/ per-stratum {count, Σy, Σy²} as blocked one-hot
+                    matmuls on the MXU (hash-aggregation replacement)
+  sample_mask/      fused per-stratum threshold gather (one-hot MXU) +
+                    Bernoulli keep mask + Horvitz-Thompson weights
+  flash_attention/  blocked causal attention for the LM serving substrate
+
+Every kernel has ops.py (jit'd wrapper with an interpret switch) and
+ref.py (pure-jnp oracle); tests sweep shapes/dtypes in interpret mode and
+assert allclose against the oracle.
+"""
+
+from . import flash_attention, geohash, sample_mask, stratified_stats
+
+__all__ = ["flash_attention", "geohash", "sample_mask", "stratified_stats"]

@@ -1,0 +1,95 @@
+"""Pallas kernel: blocked causal flash attention (forward).
+
+Grid (BH, n_q, n_kv) with the KV dimension innermost; running
+(max, normalizer, accumulator) live in VMEM scratch across sequential KV
+steps.  Upper-triangle KV blocks are skipped entirely with pl.when, so
+compiled FLOPs track the causal optimum.  GQA is handled in the BlockSpec
+index maps (kv block index = query-head block // group size) — no KV
+repetition in HBM.
+
+Block sizes are MXU-aligned (128 multiples); head_dim is padded to 128 in
+the wrapper (zamba's dh=112).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Q_BLOCK = 256
+KV_BLOCK = 256
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, scale: float, n_kv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(ki <= qi)  # causal: skip fully-masked KV blocks
+    def _step():
+        q = q_ref[0].astype(jnp.float32)  # (Qb, dh)
+        k = k_ref[0].astype(jnp.float32)  # (Kb, dh)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (Qb, Kb)
+        qpos = qi * Q_BLOCK + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = ki * KV_BLOCK + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1)
+        acc_ref[...] = alpha[:, None] * acc_ref[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _emit():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("groups", "scale", "interpret"))
+def flash_attention_pallas(
+    q: jnp.ndarray,  # (BHq, S, dh) query heads flattened
+    k: jnp.ndarray,  # (BHkv, S, dh)
+    v: jnp.ndarray,
+    groups: int,  # q heads per kv head (GQA)
+    scale: float,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    bhq, s, dh = q.shape
+    assert s % Q_BLOCK == 0 and s % KV_BLOCK == 0, s
+    n_q = s // Q_BLOCK
+    n_kv = s // KV_BLOCK
+    grid = (bhq, n_q, n_kv)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, n_kv=n_kv),
+        out_shape=jax.ShapeDtypeStruct((bhq, s, dh), q.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q_BLOCK, dh), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, KV_BLOCK, dh), lambda bh, qi, ki: (bh // groups, ki, 0)),
+            pl.BlockSpec((1, KV_BLOCK, dh), lambda bh, qi, ki: (bh // groups, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Q_BLOCK, dh), lambda bh, qi, ki: (bh, qi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Q_BLOCK,), jnp.float32),
+            pltpu.VMEM((Q_BLOCK,), jnp.float32),
+            pltpu.VMEM((Q_BLOCK, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

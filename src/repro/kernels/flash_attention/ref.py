@@ -1,0 +1,20 @@
+"""Oracle: dense causal SDPA with GQA (pure jnp, f32 softmax)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v):
+    """q: (B, S, H, dh); k/v: (B, S, K, dh); H = K * G. Causal."""
+    B, S, H, dh = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, dh)
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qg, k).astype(jnp.float32) / (dh**0.5)
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bkgqt,btkd->bqkgd", w, v)
+    return o.reshape(B, S, H, dh)

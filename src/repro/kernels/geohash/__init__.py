@@ -1,0 +1,3 @@
+from .ops import geohash_encode
+
+__all__ = ["geohash_encode"]

@@ -1,0 +1,20 @@
+"""Jit'd public wrapper for the geohash kernel.
+
+Falls back to interpret mode automatically off-TPU so the same call site
+works everywhere; neighborhood/stratum lookup stays outside the kernel
+(vectorized searchsorted — dynamic VMEM gathers are not TPU-friendly).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from .geohash import encode_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def geohash_encode(lat, lon, precision: int, block: int = 2048):
+    return encode_pallas(lat, lon, precision, block=block, interpret=not _on_tpu())

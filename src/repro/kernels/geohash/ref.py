@@ -1,0 +1,7 @@
+"""Oracle: the core library's (pure jnp) geohash encoder."""
+
+from ...core import geohash as _g
+
+
+def encode_ref(lat, lon, precision: int):
+    return _g.encode(lat, lon, precision)

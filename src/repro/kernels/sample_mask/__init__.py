@@ -1,0 +1,3 @@
+from .ops import sample_mask
+
+__all__ = ["sample_mask"]

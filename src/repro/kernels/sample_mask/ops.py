@@ -1,0 +1,12 @@
+"""Jit'd public wrapper with off-TPU interpret fallback."""
+
+from __future__ import annotations
+
+import jax
+
+from .sample_mask import sample_mask_pallas
+
+
+def sample_mask(stratum_idx, uniforms, fractions):
+    interpret = jax.default_backend() != "tpu"
+    return sample_mask_pallas(stratum_idx, uniforms, fractions, interpret=interpret)

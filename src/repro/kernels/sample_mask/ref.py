@@ -1,0 +1,12 @@
+"""Oracle: gather + threshold (pure jnp)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sample_mask_ref(stratum_idx, uniforms, fractions):
+    f = fractions[stratum_idx]
+    keep = uniforms < f
+    w = jnp.where(keep, 1.0 / jnp.maximum(f, 1e-9), 0.0)
+    return keep, w

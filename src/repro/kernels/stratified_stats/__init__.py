@@ -1,0 +1,3 @@
+from .ops import stratified_stats
+
+__all__ = ["stratified_stats"]

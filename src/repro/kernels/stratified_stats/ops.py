@@ -1,0 +1,12 @@
+"""Jit'd public wrapper with off-TPU interpret fallback."""
+
+from __future__ import annotations
+
+import jax
+
+from .stratified_stats import stratified_stats_pallas
+
+
+def stratified_stats(stratum_idx, values, mask, num_slots: int):
+    interpret = jax.default_backend() != "tpu"
+    return stratified_stats_pallas(stratum_idx, values, mask, num_slots, interpret=interpret)

@@ -1,0 +1,15 @@
+"""Oracle: segment-sum per-stratum moments (pure jnp)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def stratified_stats_ref(stratum_idx, values, mask, num_slots: int):
+    m = mask.astype(jnp.float32)
+    y = values.astype(jnp.float32)
+    count = jax.ops.segment_sum(m, stratum_idx, num_segments=num_slots)
+    s1 = jax.ops.segment_sum(m * y, stratum_idx, num_segments=num_slots)
+    s2 = jax.ops.segment_sum(m * y * y, stratum_idx, num_segments=num_slots)
+    return count, s1, s2

@@ -1,0 +1,82 @@
+"""Pallas kernel: per-stratum {count, Σy, Σy²} via one-hot MXU matmuls.
+
+TPU adaptation of the paper's hash-map aggregation: instead of scattering
+into per-stratum buckets (no efficient dynamic scatter on the VPU), each
+(points-block × strata-block) grid cell builds a one-hot membership tile
+and contracts it against [1, y, y²] rows on the MXU:
+
+    moments[3, S_blk] += [ones; y; y*y] (3, N_blk) @ onehot (N_blk, S_blk)
+
+The grid's N dimension accumulates into the same output block (sequential
+revisiting), so VMEM holds one (3, S_blk) accumulator + one one-hot tile.
+
+BlockSpec tiling: N_BLOCK=512 points x S_BLOCK=512 strata -> one-hot tile
+512x512 f32 = 1 MiB in VMEM, MXU-aligned (multiples of 128).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+N_BLOCK = 512
+S_BLOCK = 512
+
+
+def _stats_kernel(sidx_ref, val_ref, mask_ref, out_ref):
+    n_step = pl.program_id(1)
+    sidx = sidx_ref[...]  # (N_blk,)
+    y = val_ref[...].astype(jnp.float32)
+    m = mask_ref[...].astype(jnp.float32)
+    s_base = pl.program_id(0) * S_BLOCK
+    cols = s_base + jax.lax.broadcasted_iota(jnp.int32, (sidx.shape[0], S_BLOCK), 1)
+    onehot = (sidx[:, None] == cols).astype(jnp.float32)
+    rows = jnp.stack([m, m * y, m * y * y], axis=0)  # (3, N_blk)
+    part = jax.lax.dot_general(
+        rows, onehot, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (3, S_blk)
+    @pl.when(n_step == 0)
+    def _init():
+        out_ref[...] = part
+
+    @pl.when(n_step != 0)
+    def _acc():
+        out_ref[...] += part
+
+
+@functools.partial(jax.jit, static_argnames=("num_slots", "interpret"))
+def stratified_stats_pallas(
+    stratum_idx: jnp.ndarray,
+    values: jnp.ndarray,
+    mask: jnp.ndarray,
+    num_slots: int,
+    interpret: bool = False,
+):
+    """-> (count, sum, sumsq) each (num_slots,) f32.
+
+    Masked-out points contribute nothing (their one-hot row is zeroed via
+    the mask factor), so sampling masks compose directly.
+    """
+    n = stratum_idx.shape[0]
+    pad_n = (-n) % N_BLOCK
+    s_slots = ((num_slots + S_BLOCK - 1) // S_BLOCK) * S_BLOCK
+    sidx = jnp.pad(stratum_idx.astype(jnp.int32), (0, pad_n), constant_values=-1)
+    vals = jnp.pad(values.astype(jnp.float32), (0, pad_n))
+    msk = jnp.pad(mask.astype(jnp.float32), (0, pad_n))
+    grid = (s_slots // S_BLOCK, sidx.shape[0] // N_BLOCK)
+    out = pl.pallas_call(
+        _stats_kernel,
+        out_shape=jax.ShapeDtypeStruct((3, s_slots), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((N_BLOCK,), lambda s, i: (i,)),
+            pl.BlockSpec((N_BLOCK,), lambda s, i: (i,)),
+            pl.BlockSpec((N_BLOCK,), lambda s, i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((3, S_BLOCK), lambda s, i: (0, s)),
+        interpret=interpret,
+    )(sidx, vals, msk)
+    return out[0, :num_slots], out[1, :num_slots], out[2, :num_slots]

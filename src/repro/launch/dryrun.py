@@ -1,0 +1,322 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# Test hook: REPRO_DRYRUN_DEVICES overrides the placeholder device count
+# (must happen before jax locks device state on first import).
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={os.environ['REPRO_DRYRUN_DEVICES']}"
+    )
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces a JSON artifact with:
+  * compile success, wall time, per-device memory_analysis numbers;
+  * XLA cost_analysis (entry-level; loop bodies counted once) AND our
+    loop-aware HLO analysis (FLOPs / bytes / collective bytes with
+    known_trip_count multipliers — see launch/hlo.py);
+  * roofline terms for TPU v5e (197 TF/s bf16, 819 GB/s HBM, 50 GB/s ICI);
+  * MODEL_FLOPS (6ND / 2ND) and the useful-compute ratio.
+
+Usage:
+  python -m repro.launch.dryrun --arch mistral-large-123b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--skip-existing]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from .. import models
+from ..configs import ARCH_NAMES, SHAPES, get_config, get_smoke_config, supports_cell
+from ..configs.plans import get_plan
+from ..models.base import ModelConfig
+from ..sharding.logical import default_rules, use_rules
+from ..train.optimizer import AdamWConfig
+from ..train.train_loop import make_train_step
+from . import hlo, specs as S
+from .mesh import make_production_mesh, make_test_mesh, num_chips
+
+# TPU v5e hardware model (per chip)
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9
+ICI_BW = 50e9  # per-link; collective bytes are per-device ring-model totals
+
+
+def cell_config(arch: str, shape_name: str, smoke: bool = False) -> ModelConfig:
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    if shape_name == "long_500k" and cfg.family == "hybrid":
+        cfg = cfg.replace(attention_window=4096)  # windowed shared attention
+    return cfg
+
+
+def count_params(cfg: ModelConfig):
+    spec = models.param_specs(cfg)
+    total = emb = expert = 0
+    def walk(tree, in_emb):
+        nonlocal total, emb, expert
+        if hasattr(tree, "shape") and hasattr(tree, "init"):
+            n = 1
+            for d in tree.shape:
+                n *= d
+            total += n
+            if in_emb:
+                emb += n
+            if "experts" in (tree.axes or ()):
+                expert += n
+            return
+        if isinstance(tree, dict):
+            for k, v in tree.items():
+                walk(v, in_emb or k == "embedding")
+    walk(spec, False)
+    if cfg.num_experts:
+        active = total - emb - expert + expert * cfg.num_experts_per_tok / cfg.num_experts
+    else:
+        active = total - emb
+    return {"total": total, "embedding": emb, "expert": expert, "active_nonemb": active}
+
+
+def model_flops(cfg: ModelConfig, shape, chips: int, pcounts) -> float:
+    n = pcounts["active_nonemb"]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        if cfg.family == "encdec":
+            tokens *= 2  # encoder + decoder streams
+        return 6.0 * n * tokens / chips
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len / chips
+    return 2.0 * n * shape.global_batch / chips
+
+
+def lower_cell(arch: str, shape_name: str, mesh, smoke: bool = False):
+    cfg = cell_config(arch, shape_name, smoke)
+    shape = SHAPES[shape_name]
+    plan = get_plan(arch, shape.kind)
+    rules = default_rules(mesh, sequence_parallel=plan.sequence_parallel)
+    with use_rules(rules):
+        if shape.kind == "train":
+            step = make_train_step(cfg, AdamWConfig(), plan)
+            state_sds, state_ps = S.train_state_specs(cfg, rules)
+            batch_sds, batch_ps = S.train_batch_specs(cfg, shape, mesh)
+            batch_ps = jax.tree.map(lambda p: NamedSharding(mesh, p), batch_ps)
+            lowered = jax.jit(
+                step,
+                in_shardings=(state_ps, batch_ps),
+                out_shardings=(state_ps, None),
+                donate_argnums=(0,),
+            ).lower(state_sds, batch_sds)
+            return lowered, cfg, plan
+        cfg_serve = cfg.replace(remat=plan.remat)
+        p_sds, p_ps = S.serve_param_specs(cfg_serve, rules)
+        if shape.kind == "prefill":
+            in_sds, in_ps = S.prefill_specs(cfg_serve, shape, mesh)
+            in_ps = jax.tree.map(lambda p: NamedSharding(mesh, p), in_ps)
+            # the produced decode state must leave sharded like decode
+            # consumes it (unsharded scan outputs were 100+ GiB/chip)
+            state_sds_o, state_ps_o, _, _ = S.decode_specs(cfg_serve, shape, mesh, p_sds)
+            state_ps_o = jax.tree.map(lambda p: NamedSharding(mesh, p), state_ps_o)
+            if cfg.family == "encdec":
+                from ..models import encdec
+
+                def step(params, src_embeds, src_positions):
+                    memory = encdec.encode(params, cfg_serve, src_embeds, src_positions)
+                    return encdec.init_decode_state(params, cfg_serve, memory, shape.seq_len)
+
+                lowered = jax.jit(
+                    step,
+                    in_shardings=(p_ps, in_ps["src_embeds"], in_ps["src_positions"]),
+                    out_shardings=state_ps_o,
+                ).lower(p_sds, in_sds["src_embeds"], in_sds["src_positions"])
+            else:
+                from ..models import transformer
+
+                def step(params, tokens, positions):
+                    return transformer.prefill(params, cfg_serve, tokens, positions)
+
+                lowered = jax.jit(
+                    step,
+                    in_shardings=(p_ps, in_ps["tokens"], in_ps["positions"]),
+                    out_shardings=(None, state_ps_o),
+                ).lower(p_sds, in_sds["tokens"], in_sds["positions"])
+            return lowered, cfg_serve, plan
+        # decode
+        state_sds, state_ps, tok_sds, tok_ps = S.decode_specs(cfg_serve, shape, mesh, p_sds)
+        state_ps = jax.tree.map(lambda p: NamedSharding(mesh, p), state_ps)
+        tok_ps = NamedSharding(mesh, tok_ps)
+
+        def step(params, state, tokens):
+            return models.decode_step(params, cfg_serve, state, tokens)
+
+        lowered = jax.jit(
+            step,
+            in_shardings=(p_ps, state_ps, tok_ps),
+            out_shardings=(None, state_ps),
+            donate_argnums=(1,),
+        ).lower(p_sds, state_sds, tok_sds)
+        return lowered, cfg_serve, plan
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, outdir: str,
+             smoke: bool = False, mesh=None, skip_existing: bool = False) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    if mesh is not None:
+        mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    out_path = os.path.join(outdir, f"{arch}__{shape_name}__{mesh_name}.json")
+    if skip_existing and os.path.exists(out_path):
+        with open(out_path) as f:
+            return json.load(f)
+    os.makedirs(outdir, exist_ok=True)
+    cfg0 = cell_config(arch, shape_name, smoke)
+    shape = SHAPES[shape_name]
+    record: dict = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "kind": shape.kind,
+        "family": cfg0.family,
+    }
+    ok, reason = supports_cell(cfg0.family, shape_name)
+    if not ok:
+        record.update({"status": "skipped", "reason": reason})
+        with open(out_path, "w") as f:
+            json.dump(record, f, indent=2)
+        return record
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = num_chips(mesh)
+    try:
+        t0 = time.time()
+        lowered, cfg, plan = lower_cell(arch, shape_name, mesh, smoke)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        mem = compiled.memory_analysis()
+        xla_cost = compiled.cost_analysis() or {}
+        text = compiled.as_text()
+        mine = hlo.analyze_module(text, chips)
+        pcounts = count_params(cfg)
+        mf = model_flops(cfg, shape, chips, pcounts)
+        compute_s = mine.flops / PEAK_FLOPS
+        memory_s = mine.bytes_accessed / HBM_BW
+        # TPU-corrected collective bytes: XLA:CPU float-normalization turns
+        # bf16 dots f32 *before* partitioning, inflating collective sizes
+        # 2x vs the TPU target; hlo.py chases convert chains to undo it.
+        coll_s = mine.collective_moved_tpu / ICI_BW
+        dominant = max(
+            ("compute", compute_s), ("memory", memory_s), ("collective", coll_s),
+            key=lambda kv: kv[1],
+        )[0]
+        record.update(
+            {
+                "status": "ok",
+                "plan": dataclasses.asdict(plan),
+                "chips": chips,
+                "lower_s": t_lower,
+                "compile_s": t_compile,
+                "memory": {
+                    "argument_bytes": mem.argument_size_in_bytes,
+                    "output_bytes": mem.output_size_in_bytes,
+                    "temp_bytes": mem.temp_size_in_bytes,
+                    "alias_bytes": mem.alias_size_in_bytes,
+                    "peak_estimate_bytes": mem.argument_size_in_bytes
+                    + mem.temp_size_in_bytes
+                    + mem.output_size_in_bytes
+                    - mem.alias_size_in_bytes,
+                    # minus XLA:CPU's f32 shadow copies of bf16 state
+                    # (absent on the TPU target; see hlo.f32_shadow_bytes)
+                    "f32_shadow_bytes": hlo.f32_shadow_bytes(text),
+                    "peak_tpu_estimate_bytes": max(
+                        0,
+                        mem.argument_size_in_bytes
+                        + mem.temp_size_in_bytes
+                        + mem.output_size_in_bytes
+                        - mem.alias_size_in_bytes
+                        - hlo.f32_shadow_bytes(text),
+                    ),
+                },
+                "xla_cost": {
+                    "flops": xla_cost.get("flops"),
+                    "bytes_accessed": xla_cost.get("bytes accessed"),
+                },
+                "hlo_cost": mine.to_json(),
+                "params": pcounts,
+                "model_flops_per_chip": mf,
+                "useful_flops_ratio": mf / mine.flops if mine.flops else None,
+                "roofline": {
+                    "compute_s": compute_s,
+                    "memory_s": memory_s,
+                    "collective_s": coll_s,
+                    "dominant": dominant,
+                    "bound_s": max(compute_s, memory_s, coll_s),
+                    "roofline_fraction": compute_s / max(compute_s, memory_s, coll_s)
+                    if max(compute_s, memory_s, coll_s) > 0
+                    else None,
+                },
+                "loop_trip_counts": hlo.loop_trip_counts(text)[:16],
+            }
+        )
+    except Exception as e:  # record failures — they are bugs to fix
+        record.update({"status": "error", "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-4000:]})
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=2)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--all", action="store_true", help="run every cell")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--smoke", action="store_true", help="reduced configs (tests)")
+    ap.add_argument("--test-mesh", action="store_true", help="2x2x2 mesh (tests)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    mesh = make_test_mesh() if args.test_mesh else None
+    cells = []
+    archs = [args.arch] if args.arch else list(ARCH_NAMES)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                cells.append((arch, shape, mp))
+    if not (args.all or args.arch or args.shape):
+        ap.error("specify --arch/--shape or --all")
+
+    failures = 0
+    for arch, shape, mp in cells:
+        t0 = time.time()
+        rec = run_cell(arch, shape, mp, args.out, smoke=args.smoke, mesh=mesh,
+                       skip_existing=args.skip_existing)
+        status = rec.get("status")
+        extra = ""
+        if status == "ok":
+            r = rec["roofline"]
+            extra = (
+                f"compute={r['compute_s']:.3e}s memory={r['memory_s']:.3e}s "
+                f"coll={r['collective_s']:.3e}s dom={r['dominant']} "
+                f"mem/chip={rec['memory']['peak_estimate_bytes']/2**30:.2f}GiB "
+                f"compile={rec['compile_s']:.0f}s"
+            )
+        elif status == "error":
+            failures += 1
+            extra = rec.get("error", "")[:160]
+        print(f"[{status:7s}] {arch:24s} {shape:12s} mp={int(mp)} {extra} ({time.time()-t0:.0f}s)",
+              flush=True)
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,483 @@
+"""HLO-text cost analysis with loop-aware accounting.
+
+Why this exists: ``compiled.cost_analysis()`` visits a while-loop body
+*once*, so a scan-over-layers model under-reports FLOPs/bytes by ~L and a
+grad-accumulation scan by another factor of n_micro.  The compiled text
+does carry ``known_trip_count`` on while ops, so we parse the partitioned
+module, build the computation call graph, and propagate multipliers:
+
+  * while body/condition edges multiply by the trip count;
+  * fusion/call/to_apply edges multiply by 1 — and ops inside *fused*
+    computations contribute FLOPs but not memory bytes (fusion internals
+    live in registers/VMEM; the fusion site's operands+result are the HBM
+    traffic), matching XLA's own fusion cost model;
+  * collectives contribute bytes-moved-per-device under a ring cost model:
+      all-gather        R (g-1)/g     (R = result bytes, g = group size)
+      reduce-scatter    R (g-1)
+      all-reduce        2R (g-1)/g
+      all-to-all        R (g-1)/g
+      collective-permute R
+
+The module is the per-device SPMD program, so all totals are per-device.
+Validated against XLA cost_analysis on unrolled modules (tests/test_hlo.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_OPNAME_RE = re.compile(r"([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?(?P<name>[\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[\\\"={: ]+n[\\\"=: ]+\"?(\d+)')
+_GROUPS_BRACKET_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "negate",
+    "abs", "exponential", "exponential-minus-one", "log", "log-plus-one",
+    "tanh", "rsqrt", "sqrt", "power", "select", "and", "or", "xor", "not",
+    "sign", "cosine", "sine", "floor", "ceil", "round-nearest-afz",
+    "round-nearest-even", "clamp", "remainder", "atan2", "cbrt", "erf",
+    "logistic", "shift-left", "shift-right-logical", "shift-right-arithmetic",
+}
+
+_COLLECTIVES = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute"}
+
+
+def _shape_dims(type_str: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        out.append((dtype, [int(d) for d in dims.split(",") if d]))
+    return out
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_elems(type_str: str) -> int:
+    total = 0
+    for _, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_BRACKET_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return default
+
+
+def _parse_def(line: str):
+    """Parse '%name = TYPE op(args), attrs' robustly (tuple types contain
+    /*index=N*/ comments and op_name metadata contains parens)."""
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[1:eq].strip()
+    rest = s[eq + 3 :]
+    if rest.startswith("("):
+        depth = 0
+        i = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        type_str = rest[: i + 1]
+        tail = rest[i + 1 :].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str = rest[:sp]
+        tail = rest[sp + 1 :].lstrip()
+    m = _OPNAME_RE.match(tail)
+    if not m:
+        return None
+    op = m.group(1)
+    args_rest = tail[m.end() :]
+    return name, type_str, op, args_rest
+
+
+def _collective_moved(op: str, result_bytes: float, g: int) -> float:
+    if op == "all-gather":
+        return result_bytes * (g - 1) / max(g, 1)
+    if op == "reduce-scatter":
+        return result_bytes * (g - 1)
+    if op == "all-reduce":
+        return 2.0 * result_bytes * (g - 1) / max(g, 1)
+    if op == "all-to-all":
+        return result_bytes * (g - 1) / max(g, 1)
+    return float(result_bytes)  # collective-permute
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_moved: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+    coll_moved_tpu: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+    coll_counts: dict = dataclasses.field(default_factory=lambda: defaultdict(int))
+    # edges: (callee, factor, fused) — fused edges suppress callee bytes
+    edges: list = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class ModuleCost:
+    flops: float
+    bytes_accessed: float
+    collective_moved: float
+    collective_moved_tpu: float
+    collective_by_op: dict
+    collective_counts: dict
+    num_collectives: int
+
+    def to_json(self):
+        return {
+            "flops": float(self.flops),
+            "bytes_accessed": float(self.bytes_accessed),
+            "collective_moved_bytes": float(self.collective_moved),
+            "collective_moved_bytes_tpu": float(self.collective_moved_tpu),
+            "collective_by_op": {k: float(v) for k, v in self.collective_by_op.items()},
+            "collective_counts": dict(self.collective_counts),
+            "num_collectives": int(self.num_collectives),
+        }
+
+
+def analyze_module(text: str, num_devices: int = 1) -> ModuleCost:
+    # pass 1: symbol table (name -> type string) and computation membership
+    sym: dict[str, str] = {}
+    comps: dict[str, CompCost] = {}
+    comp_lines: dict[str, list[str]] = defaultdict(list)
+    entry = None
+    current = None
+    for line in text.splitlines():
+        mc = _COMP_RE.match(line)
+        if mc and ("=" not in line.split("(")[0]):
+            current = mc.group("name")
+            if line.lstrip().startswith("ENTRY"):
+                entry = current
+            comps.setdefault(current, CompCost())
+            continue
+        pd = _parse_def(line)
+        if pd and current is not None:
+            sym[pd[0]] = pd[1]
+            comp_lines[current].append(line)
+
+    # pass 1.5: per-computation def tables (for fused-param access analysis)
+    # all_defs: global def map for bf16-origin chasing (XLA:CPU float
+    # normalization turns bf16 dots into f32, so collectives that would
+    # move bf16 on a TPU move f32 here; the "tpu" numbers undo that).
+    all_defs: dict[str, tuple[str, str, list[str]]] = {}
+    comp_defs: dict[str, dict[str, tuple[str, str, list[str]]]] = {}
+    for cname, lines in comp_lines.items():
+        defs = {}
+        for line in lines:
+            pd = _parse_def(line)
+            if not pd:
+                continue
+            name, rtype, op, rest = pd
+            cut = rest.find(")")
+            args_part = rest[:cut] if cut >= 0 else rest
+            defs[name] = (op, rtype, _OPERAND_RE.findall(args_part))
+            all_defs[name] = defs[name]
+        comp_defs[cname] = defs
+
+    uses: dict[str, list[str]] = defaultdict(list)  # operand -> consumer names
+    for nm, (_, _, ops) in list(all_defs.items()):
+        for o in ops:
+            uses[o].append(nm)
+
+    def _bf16_on_tpu(name: str, depth: int = 4) -> bool:
+        """Would this value be bf16 on the TPU target?  True when the f32
+        chain originates from (producer side) or collapses back to
+        (consumer side) bf16 — i.e. the f32 is CPU float-normalization."""
+        seen = 0
+        cur = name
+        while cur in all_defs and seen < depth:
+            op, rtype, operands = all_defs[cur]
+            if "bf16[" in rtype:
+                return True
+            if not operands:
+                break
+            cur = operands[0]
+            seen += 1
+        if "bf16[" in sym.get(cur, ""):
+            return True
+        # consumer chase (2 hops): f32 values converted straight to bf16
+        frontier = [name]
+        for _ in range(2):
+            nxt = []
+            for nm in frontier:
+                for c in uses.get(nm, []):
+                    rt = sym.get(c, "")
+                    if "bf16[" in rt:
+                        return True
+                    nxt.append(c)
+            frontier = nxt[:8]
+        return False
+
+    def _fusion_operand_bytes(callee: str, arity: int) -> list[float] | None:
+        """Effective read bytes per fusion parameter: parameters consumed
+        only by (dynamic-)slice ops charge the slice sizes, not the full
+        operand (XLA's fusion cost model does the same element-count walk)."""
+        defs = comp_defs.get(callee)
+        if defs is None:
+            return None
+        param_names = {}
+        for nm, (op, rtype, _) in defs.items():
+            if op == "parameter":
+                # parameter index is in the original line; recover by order
+                param_names[nm] = rtype
+        out: list[float] = []
+        # map parameter order by numeric suffix of parameter(i) is lost here;
+        # conservative: analyze each param name independently and sum.
+        per_param: dict[str, float] = {}
+        for nm, rtype in param_names.items():
+            consumers = [
+                (op2, rt2) for (op2, rt2, ops2) in defs.values() if nm in ops2
+            ]
+            if consumers and all(op2 in ("slice", "dynamic-slice") for op2, _ in consumers):
+                per_param[nm] = float(sum(_shape_bytes(rt2) for _, rt2 in consumers))
+            else:
+                per_param[nm] = float(_shape_bytes(rtype))
+        return [per_param[nm] for nm in per_param]
+
+    # pass 2: per-computation costs
+    for cname, lines in comp_lines.items():
+        cc = comps[cname]
+        for line in lines:
+            pd = _parse_def(line)
+            if not pd:
+                continue
+            _, rtype, op, rest = pd
+            cut = rest.find(")")
+            args_part = rest[:cut] if cut >= 0 else rest
+            operand_names = _OPERAND_RE.findall(args_part)
+            rbytes = _shape_bytes(rtype)
+            relems = _shape_elems(rtype)
+            if op == "parameter" or op == "constant":
+                continue
+            if op == "while":
+                trip = 1
+                mt = _TRIP_RE.search(line)
+                if mt:
+                    trip = int(mt.group(1))
+                for kind in ("body", "condition"):
+                    mm = re.search(kind + r"=%?([\w.\-]+)", line)
+                    if mm:
+                        cc.edges.append((mm.group(1), float(trip), False))
+                continue
+            if op == "conditional":
+                for mm in re.finditer(r"(?:branch_computations=\{([^}]*)\}|true_computation=%?([\w.\-]+)|false_computation=%?([\w.\-]+))", line):
+                    for grp in mm.groups():
+                        if grp:
+                            for nm in re.findall(r"%?([\w.\-]+)", grp):
+                                cc.edges.append((nm, 1.0, False))
+                cc.bytes += rbytes + sum(_shape_bytes(sym.get(o, "")) for o in operand_names)
+                continue
+            called = re.search(r"(?:calls|to_apply)=%?([\w.\-]+)", line)
+            if op == "fusion":
+                if called:
+                    cc.edges.append((called.group(1), 1.0, True))
+                    eff = _fusion_operand_bytes(called.group(1), len(operand_names))
+                    if eff is not None:
+                        cc.bytes += rbytes + sum(eff)
+                    else:
+                        cc.bytes += rbytes + sum(_shape_bytes(sym.get(o, "")) for o in operand_names)
+                else:
+                    cc.bytes += rbytes + sum(_shape_bytes(sym.get(o, "")) for o in operand_names)
+                continue
+            if op == "call":
+                if called:
+                    cc.edges.append((called.group(1), 1.0, False))
+                continue
+            # plain op: memory traffic with in-place/slice semantics
+            if op in ("tuple", "get-tuple-element", "bitcast", "after-all", "reshape",
+                      "copy-start", "copy-done", "optimization-barrier"):
+                pass  # zero-cost plumbing
+            elif op in ("dynamic-slice", "slice", "copy", "transpose", "concatenate",
+                        "reverse", "pad"):
+                cc.bytes += 2.0 * rbytes  # read slice + write result
+            elif op == "dynamic-update-slice":
+                upd = _shape_bytes(sym.get(operand_names[1], "")) if len(operand_names) > 1 else rbytes
+                cc.bytes += 2.0 * upd  # in-place: read + write the update only
+            elif op == "gather":
+                idx = _shape_bytes(sym.get(operand_names[1], "")) if len(operand_names) > 1 else 0
+                cc.bytes += 2.0 * rbytes + idx
+            elif op == "scatter":
+                upd = _shape_bytes(sym.get(operand_names[2], "")) if len(operand_names) > 2 else rbytes
+                idx = _shape_bytes(sym.get(operand_names[1], "")) if len(operand_names) > 1 else 0
+                cc.bytes += 3.0 * upd + idx  # read-modify-write touched rows
+            elif op in ("broadcast", "iota"):
+                cc.bytes += rbytes
+            else:
+                cc.bytes += rbytes + sum(_shape_bytes(sym.get(o, "")) for o in operand_names)
+            base = op.replace("-start", "")
+            if base in _COLLECTIVES:
+                g = _group_size(line, num_devices)
+                mv = _collective_moved(base, rbytes, g)
+                cc.coll_moved[base] += mv
+                # TPU-corrected: a f32 collective whose data is bf16-origin
+                # (convert inserted by CPU float normalization) moves bf16
+                # bytes on the target hardware.
+                factor = 1.0
+                if "f32[" in rtype and operand_names and _bf16_on_tpu(operand_names[0]):
+                    factor = 0.5
+                cc.coll_moved_tpu[base] += mv * factor
+                cc.coll_counts[base] += 1
+                continue
+            if op == "dot":
+                k = 1.0
+                lhs_type = sym.get(operand_names[0], "") if operand_names else ""
+                mdims = re.search(r"lhs_contracting_dims=\{([^}]*)\}", line)
+                if lhs_type and mdims:
+                    dims = _shape_dims(lhs_type)
+                    if dims:
+                        shape = dims[0][1]
+                        for di in mdims.group(1).split(","):
+                            di = di.strip()
+                            if di and int(di) < len(shape):
+                                k *= shape[int(di)]
+                cc.flops += 2.0 * relems * k
+            elif op == "convolution":
+                cc.flops += 2.0 * relems  # lower bound; convs unused in repro
+            elif op in ("reduce", "reduce-window"):
+                in_elems = sum(
+                    _shape_elems(sym.get(o, "")) for o in operand_names[: max(1, len(operand_names) // 2)]
+                )
+                cc.flops += float(in_elems)
+                if called:
+                    pass  # tiny scalar computation; ignore
+            elif op in _ELEMENTWISE:
+                cc.flops += float(relems)
+            # everything else (reshape, transpose, slice, etc.): bytes only
+
+    # pass 3: propagate multipliers from the entry (flops_mult, bytes_mult)
+    mult: dict[str, tuple[float, float]] = defaultdict(lambda: (0.0, 0.0))
+    if entry is None:
+        entry = next(iter(comps), None)
+    if entry is None:
+        return ModuleCost(0, 0, 0, {}, {}, 0)
+    mult[entry] = (1.0, 1.0)
+    # iterate to fixpoint over the DAG (bounded by #comps passes)
+    for _ in range(len(comps) + 2):
+        changed = False
+        acc: dict[str, tuple[float, float]] = defaultdict(lambda: (0.0, 0.0))
+        acc[entry] = (1.0, 1.0)
+        for cname, cc in comps.items():
+            fm, bm = mult[cname]
+            if fm == 0 and bm == 0:
+                continue
+            for callee, factor, fused in cc.edges:
+                if callee not in comps:
+                    continue
+                f0, b0 = acc[callee]
+                add_f = fm * factor
+                add_b = 0.0 if fused else bm * factor
+                acc[callee] = (f0 + add_f, b0 + add_b)
+        acc_final = {k: acc[k] for k in comps}
+        if acc_final != {k: mult[k] for k in comps}:
+            changed = True
+            mult = defaultdict(lambda: (0.0, 0.0), acc_final)
+        if not changed:
+            break
+
+    flops = 0.0
+    bytes_acc = 0.0
+    coll_by_op: defaultdict = defaultdict(float)
+    coll_tpu: defaultdict = defaultdict(float)
+    coll_counts: defaultdict = defaultdict(int)
+    for cname, cc in comps.items():
+        fm, bm = mult[cname]
+        flops += fm * cc.flops
+        bytes_acc += bm * cc.bytes
+        m = bm if bm > 0 else fm
+        for k, v in cc.coll_moved.items():
+            coll_by_op[k] += m * v
+        for k, v in cc.coll_moved_tpu.items():
+            coll_tpu[k] += m * v
+        for k, v in cc.coll_counts.items():
+            coll_counts[k] += int(m * v)
+    return ModuleCost(
+        flops=flops,
+        bytes_accessed=bytes_acc,
+        collective_moved=sum(coll_by_op.values()),
+        collective_moved_tpu=sum(coll_tpu.values()),
+        collective_by_op=dict(coll_by_op),
+        collective_counts=dict(coll_counts),
+        num_collectives=sum(coll_counts.values()),
+    )
+
+
+def loop_trip_counts(text: str) -> list[int]:
+    return [int(x) for x in _TRIP_RE.findall(text)]
+
+
+def f32_shadow_bytes(text: str, min_bytes: int = 64 * 2**20) -> int:
+    """Estimate of XLA:CPU's f32 shadow copies of bf16 state.
+
+    The CPU backend has no bf16 compute units, so float normalization keeps
+    f32 versions of large bf16 *loop-carried* tensors (KV caches, stacked
+    params).  None of these exist on the TPU target (native bf16 MXU).  We
+    count f32 entries of while-op carry tuples that (a) exceed min_bytes
+    and (b) have a same-dims bf16 twin somewhere in the module — i.e. the
+    value demonstrably exists in both precisions.  Deduplicated by dims.
+    Subtracting from memory_analysis temps gives the TPU-corrected per-chip
+    estimate reported next to the raw number.
+    """
+    bf16_dims: set[str] = set()
+    while_f32: dict[str, int] = {}
+    for line in text.splitlines():
+        pd = _parse_def(line)
+        if not pd:
+            continue
+        _, rtype, op, _ = pd
+        for m in re.finditer(r"bf16\[([0-9,]*)\]", rtype):
+            bf16_dims.add(m.group(1))
+        if op == "while":
+            for m in re.finditer(r"f32\[([0-9,]*)\]", rtype):
+                dims = m.group(1)
+                n = 1
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+                b = n * 4
+                if b >= min_bytes:
+                    while_f32[dims] = b
+    return int(sum(b for dims, b in while_f32.items() if dims in bf16_dims))

@@ -1,0 +1,232 @@
+"""Input specs (ShapeDtypeStruct stand-ins) + shardings per cell.
+
+Every model input becomes a weak-type-correct ShapeDtypeStruct so the
+dry-run lowers with zero allocation.  Modality stubs: [vlm]/[audio] archs
+receive precomputed patch/frame embeddings here (the assignment's
+``input_specs()`` contract).
+
+Sharding of serving state uses a divisibility-aware heuristic:
+  1. the batch-sized dim shards over the data axes,
+  2. the kv-head dim shards over "model" when it divides it, else the
+     largest model-divisible dim does (sequence-sharded flash-decode
+     layout for GQA archs whose kv heads < model axis).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .. import models
+from ..configs.shapes import ShapeSpec
+from ..models.base import ModelConfig, abstract_params, spec_axes
+from ..models.encdec import EncDecBatch
+from ..models.transformer import Batch
+from ..sharding.logical import LogicalRules, param_sharding
+from ..train.optimizer import TrainState
+from .mesh import data_axes
+
+
+def _dp(mesh) -> tuple[str, ...]:
+    return data_axes(mesh)
+
+
+def _dp_size(mesh) -> int:
+    n = 1
+    for a in _dp(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def _model_size(mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+def _batch_spec_entry(mesh, batch: int):
+    dp = _dp(mesh)
+    if not dp or batch % _dp_size(mesh) != 0:
+        return None
+    return dp if len(dp) > 1 else dp[0]
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# Train batches
+# ---------------------------------------------------------------------------
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    B, S = shape.global_batch, shape.seq_len
+    ns = cfg.data_num_strata + 1
+    bdim = _batch_spec_entry(mesh, B)
+    if cfg.family == "encdec":
+        batch = EncDecBatch(
+            src_embeds=sds((B, S, cfg.d_model), jnp.bfloat16),
+            tgt_tokens=sds((B, S), jnp.int32),
+            targets=sds((B, S), jnp.int32),
+            src_positions=sds((B, S), jnp.int32),
+            tgt_positions=sds((B, S), jnp.int32),
+            seq_weight=sds((B,), jnp.float32),
+            stratum=sds((B,), jnp.int32),
+            stratum_counts=sds((ns,), jnp.int32),
+        )
+        ps = EncDecBatch(
+            src_embeds=P(bdim, None, None),
+            tgt_tokens=P(bdim, None),
+            targets=P(bdim, None),
+            src_positions=P(bdim, None),
+            tgt_positions=P(bdim, None),
+            seq_weight=P(bdim),
+            stratum=P(bdim),
+            stratum_counts=P(None),
+        )
+        return batch, ps
+    if cfg.embeddings_in:
+        tokens = sds((B, S, cfg.d_model), jnp.bfloat16)
+        tokens_ps = P(bdim, None, None)
+    else:
+        tokens = sds((B, S), jnp.int32)
+        tokens_ps = P(bdim, None)
+    if cfg.mrope_sections:
+        positions = sds((3, B, S), jnp.int32)
+        pos_ps = P(None, bdim, None)
+    else:
+        positions = sds((B, S), jnp.int32)
+        pos_ps = P(bdim, None)
+    batch = Batch(
+        tokens=tokens,
+        targets=sds((B, S), jnp.int32),
+        positions=positions,
+        seq_weight=sds((B,), jnp.float32),
+        stratum=sds((B,), jnp.int32),
+        stratum_counts=sds((ns,), jnp.int32),
+    )
+    ps = Batch(
+        tokens=tokens_ps,
+        targets=P(bdim, None),
+        positions=pos_ps,
+        seq_weight=P(bdim),
+        stratum=P(bdim),
+        stratum_counts=P(None),
+    )
+    return batch, ps
+
+
+def train_state_specs(cfg: ModelConfig, rules: LogicalRules):
+    specs = models.param_specs(cfg)
+    p_sds = abstract_params(specs)
+    axes = spec_axes(specs)
+    p_ps = param_sharding(rules, axes, p_sds)
+    state = TrainState(
+        step=sds((), jnp.int32),
+        params=p_sds,
+        m=p_sds,
+        v=p_sds,
+    )
+    ps = TrainState(
+        step=NamedSharding(rules.mesh, P()),
+        params=p_ps,
+        m=p_ps,
+        v=p_ps,
+    )
+    return state, ps
+
+
+# ---------------------------------------------------------------------------
+# Serving state
+# ---------------------------------------------------------------------------
+
+
+def _auto_state_spec(x: jax.ShapeDtypeStruct, mesh, batch: int, kv_heads: int):
+    dims = x.shape
+    if len(dims) == 0:
+        return P()
+    spec: list[Any] = [None] * len(dims)
+    dp = _dp(mesh)
+    dp_size = _dp_size(mesh)
+    ms = _model_size(mesh)
+    bdim = None
+    for i, d in enumerate(dims):
+        if d == batch and batch > 1 and dp and batch % dp_size == 0:
+            spec[i] = dp if len(dp) > 1 else dp[0]
+            bdim = i
+            break
+    if ms > 1:
+        cand = [
+            (d, i)
+            for i, d in enumerate(dims)
+            if i != bdim and i != 0 and d % ms == 0 and d >= ms
+        ]
+        # prefer the kv-heads dim when it divides the model axis
+        kv = [(d, i) for d, i in cand if d == kv_heads]
+        pick = kv[0] if kv else (max(cand) if cand else None)
+        if pick is not None:
+            spec[pick[1]] = "model"
+    return P(*spec)
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeSpec, mesh, params_sds):
+    """(state_sds, state_ps, tokens_sds, tokens_ps) for one serve_step."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        from ..models import encdec
+
+        mem = sds((B, S, cfg.d_model), cfg.dtype)
+        state_sds = jax.eval_shape(
+            lambda p, m: encdec.init_decode_state(p, cfg, m, S), params_sds, mem
+        )
+    else:
+        from ..models import transformer
+
+        state_sds = jax.eval_shape(lambda: transformer.init_decode_state(cfg, B, S))
+    state_ps = jax.tree.map(
+        lambda x: _auto_state_spec(x, mesh, B, cfg.num_kv_heads), state_sds
+    )
+    bdim = _batch_spec_entry(mesh, B)
+    if cfg.embeddings_in and cfg.family != "encdec":
+        tokens = sds((B, cfg.d_model), jnp.bfloat16)
+        tokens_ps = P(bdim, None)
+    else:
+        tokens = sds((B,), jnp.int32)
+        tokens_ps = P(bdim)
+    return state_sds, state_ps, tokens, tokens_ps
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    """(inputs_sds, inputs_ps) for the prefill step."""
+    B, S = shape.global_batch, shape.seq_len
+    bdim = _batch_spec_entry(mesh, B)
+    if cfg.family == "encdec":
+        return (
+            {"src_embeds": sds((B, S, cfg.d_model), jnp.bfloat16), "src_positions": sds((B, S), jnp.int32)},
+            {"src_embeds": P(bdim, None, None), "src_positions": P(bdim, None)},
+        )
+    if cfg.embeddings_in:
+        tokens, tokens_ps = sds((B, S, cfg.d_model), jnp.bfloat16), P(bdim, None, None)
+    else:
+        tokens, tokens_ps = sds((B, S), jnp.int32), P(bdim, None)
+    if cfg.mrope_sections:
+        positions, pos_ps = sds((3, B, S), jnp.int32), P(None, bdim, None)
+    else:
+        positions, pos_ps = sds((B, S), jnp.int32), P(bdim, None)
+    return {"tokens": tokens, "positions": positions}, {"tokens": tokens_ps, "positions": pos_ps}
+
+
+def serve_param_specs(cfg: ModelConfig, rules: LogicalRules):
+    """Inference params in compute dtype (bf16) with the same sharding."""
+    specs = models.param_specs(cfg)
+    p_sds = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, cfg.dtype if s.dtype == jnp.float32 and len(s.shape) > 1 else s.dtype),
+        specs,
+        is_leaf=lambda x: hasattr(x, "init"),
+    )
+    axes = spec_axes(specs)
+    p_ps = param_sharding(rules, axes, p_sds)
+    return p_sds, p_ps

@@ -1,0 +1,137 @@
+"""End-to-end training driver with fault tolerance and the EdgeSOS data
+plane.  Runs real steps on whatever devices exist (CPU smoke configs in
+this container; the same code lowers to the production mesh).
+
+Features exercised here:
+  * EdgeSOS-sampled batches with HT-weighted unbiased loss;
+  * stratified loss telemetry (mean ± MoE) and the QoS feedback controller
+    steering the data sampling fraction against --target-re;
+  * sharded checkpointing (async, atomic, retention), resume on restart;
+  * step-level fault tolerance: a failing step restores the last
+    checkpoint and continues (use --inject-failure to see it work);
+  * deterministic data resume from the window index.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b --smoke \
+      --steps 50 --batch 16 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCH_NAMES, get_config, get_smoke_config
+from ..core import feedback
+from ..data.batching import edgesos_batch
+from ..data.tokens import StratifiedTokenStream
+from ..models import init_params, param_specs
+from ..train.checkpoint import CheckpointManager
+from ..train.optimizer import AdamWConfig, adamw_init
+from ..train.train_loop import StepPlan, make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b", choices=ARCH_NAMES)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=16, help="window size (sequences)")
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--fraction", type=float, default=0.75)
+    ap.add_argument("--target-re", type=float, default=0.2)
+    ap.add_argument("--num-strata", type=int, default=16)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--inject-failure", type=int, default=0, help="fail at this step once")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    cfg = cfg.replace(data_num_strata=args.num_strata)
+    if cfg.family == "encdec":
+        raise SystemExit("train driver covers decoder families; see examples for enc-dec")
+
+    out_batch = max(2, int(round(args.batch * args.fraction)))
+    opt_cfg = AdamWConfig(peak_lr=args.lr, warmup_steps=10, total_steps=args.steps)
+    plan = StepPlan(num_microbatches=args.microbatches, remat="none" if args.smoke else "full")
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, plan), donate_argnums=(0,))
+
+    params = init_params(jax.random.key(0), param_specs(cfg))
+    state = adamw_init(params)
+    start_step = 0
+    manager = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    if manager is not None:
+        restored = manager.restore_latest(state)
+        if restored is not None:
+            state, start_step = restored
+            state = jax.tree.map(jnp.asarray, state)
+            print(f"[train] resumed from checkpoint step {start_step}")
+
+    stream = StratifiedTokenStream(
+        cfg.vocab_size, args.seq, num_strata=args.num_strata, seed=7
+    )
+    ctrl = feedback.init_state(args.fraction)
+    slo = feedback.SLO(target_relative_error=args.target_re, min_fraction=0.2)
+
+    windows = list(stream.batches(args.batch, args.steps + start_step + 1))
+    key = jax.random.key(1)
+    failed_once = False
+    t0 = time.time()
+    step = start_step
+    while step < args.steps:
+        window = windows[step]
+        key, sub = jax.random.split(key)
+        batch = edgesos_batch(sub, window, float(ctrl.fraction), args.num_strata, out_batch)
+        try:
+            if args.inject_failure and step == args.inject_failure and not failed_once:
+                failed_once = True
+                raise RuntimeError("injected node failure")
+            new_state, metrics = step_fn(state, batch)
+        except Exception as e:
+            print(f"[train] step {step} failed ({e}); restoring last checkpoint")
+            if manager is None:
+                raise
+            manager.wait()
+            restored = manager.restore_latest(state)
+            if restored is None:
+                raise
+            state, step = restored
+            state = jax.tree.map(jnp.asarray, state)
+            continue
+        state = new_state
+        ctrl = feedback.update(
+            ctrl, metrics["stratified_loss_re"], jnp.int32(args.batch), slo
+        )
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(
+                f"[train] step {step:5d} loss={float(metrics['loss']):.4f} "
+                f"strat_loss={float(metrics['stratified_loss_mean']):.4f}"
+                f"±{float(metrics['stratified_loss_moe']):.4f} "
+                f"re={float(metrics['stratified_loss_re']):.3f} "
+                f"frac={float(ctrl.fraction):.2f} "
+                f"gnorm={float(metrics['grad_norm']):.2f}",
+                flush=True,
+            )
+        step += 1
+        if manager is not None and step % args.ckpt_every == 0:
+            manager.save(step, state)
+    if manager is not None:
+        manager.save(step, state)
+        manager.wait()
+    dt = time.time() - t0
+    print(f"[train] done: {args.steps - start_step} steps in {dt:.1f}s "
+          f"({(args.steps - start_step) / max(dt, 1e-9):.2f} steps/s)")
+    return float(jax.device_get(jnp.asarray(0.0)))  # sync
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Model zoo: family dispatch over the assigned architectures."""
+
+from __future__ import annotations
+
+from . import encdec, transformer
+from .base import ModelConfig, ParamSpec, abstract_params, init_params, spec_axes
+
+
+def param_specs(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return encdec.param_specs(cfg)
+    return transformer.param_specs(cfg)
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    if cfg.family == "encdec":
+        return encdec.loss_fn(params, cfg, batch)
+    return transformer.loss_fn(params, cfg, batch)
+
+
+def decode_step(params, cfg: ModelConfig, state, tokens):
+    if cfg.family == "encdec":
+        return encdec.decode_step(params, cfg, state, tokens)
+    return transformer.decode_step(params, cfg, state, tokens)
+
+
+__all__ = [
+    "ModelConfig",
+    "ParamSpec",
+    "abstract_params",
+    "decode_step",
+    "encdec",
+    "init_params",
+    "loss_fn",
+    "param_specs",
+    "spec_axes",
+    "transformer",
+]

@@ -1,0 +1,154 @@
+"""Model substrate foundations: configs, parameter specs, initialization.
+
+Parameters are plain pytrees (nested dicts of arrays).  Every leaf is
+described by a :class:`ParamSpec` carrying shape, dtype, *logical axes* and
+an initializer tag; the sharding layer maps logical axes to mesh axes, and
+the dry-run materializes specs as ShapeDtypeStructs without allocation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ParamSpec(NamedTuple):
+    shape: tuple[int, ...]
+    dtype: Any
+    axes: tuple[str | None, ...]  # logical axis names, len == len(shape)
+    init: str = "normal"  # normal | zeros | ones | embed | scaled
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Superset config covering the ten assigned architectures."""
+
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    # --- MoE ---
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    moe_capacity_factor: float = 1.25
+    # --- SSM (mamba2) ---
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_groups: int = 1
+    ssm_expand: int = 2
+    conv_width: int = 4
+    # --- hybrid (zamba2): shared attention block cadence ---
+    shared_attn_every: int = 0
+    # --- xLSTM ---
+    slstm_every: int = 0  # 1-in-N layers is sLSTM; 0 -> no sLSTM
+    # --- enc-dec ---
+    encoder_layers: int = 0
+    decoder_layers: int = 0
+    # --- modality stubs (vlm/audio): inputs are precomputed embeddings ---
+    embeddings_in: bool = False
+    mrope_sections: tuple[int, ...] = ()  # qwen2-vl M-RoPE (t, h, w) rotary split
+    # --- long-context handling ---
+    attention_window: int = 0  # 0 = full causal; >0 = sliding window
+    # --- numerics / structure ---
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    vocab_round: int = 256  # pad vocab for TP divisibility + lane alignment
+    chunk_size: int = 256  # chunked linear attention / blockwise attn chunk
+    remat: str = "full"  # none | full | dots | offload (activation ckpt policy)
+    # --- data-layer (paper integration) ---
+    data_num_strata: int = 64  # strata slots for stratified loss telemetry
+
+    @property
+    def dh(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        return round_up(self.vocab_size, self.vocab_round)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Initialization from specs
+# ---------------------------------------------------------------------------
+
+
+def _init_leaf(key, spec: ParamSpec) -> jnp.ndarray:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "embed":
+        return (jax.random.normal(key, spec.shape) * 0.02).astype(spec.dtype)
+    # fan-in scaled normal for projections; last-but-one axis group = fan_in
+    fan_in = spec.shape[0] if len(spec.shape) == 1 else int(jnp.prod(jnp.array(spec.shape[:-1])))
+    if len(spec.shape) >= 2:
+        fan_in = 1
+        for d in spec.shape[:-1]:
+            fan_in *= d
+    scale = 1.0 / max(fan_in, 1) ** 0.5
+    if spec.init == "scaled":  # residual-out projections: extra depth scaling
+        scale = scale * 0.5
+    return (jax.random.normal(key, spec.shape) * scale).astype(spec.dtype)
+
+
+def init_params(key, specs) -> Any:
+    """Materialize a spec pytree into real parameters (small configs)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_leaf(k, s) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(specs) -> Any:
+    """Spec pytree -> ShapeDtypeStruct pytree (dry-run, no allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def spec_axes(specs) -> Any:
+    """Spec pytree -> logical-axes pytree (consumed by the sharding layer)."""
+    return jax.tree.map(
+        lambda s: s.axes, specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+
+
+def stack_specs(spec: ParamSpec, n: int, axis_name: str | None = "layers") -> ParamSpec:
+    """Prepend a stacking dimension (scan-over-layers parameter layout)."""
+    return ParamSpec(
+        shape=(n,) + spec.shape, dtype=spec.dtype, axes=(axis_name,) + spec.axes, init=spec.init
+    )
+
+
+def tree_slice(params, start: int, end: int):
+    """Static slice of stacked (scan) parameters along the leading axis."""
+    return jax.tree.map(lambda x: x[start:end], params)

@@ -1,0 +1,178 @@
+"""Chunked gated linear attention: the shared engine for Mamba-2 and mLSTM.
+
+Both are instances of the recurrence (per head)
+
+    S_t = exp(g_t) * S_{t-1} + k_t v_t^T        (dk x dv matrix state)
+    y_t = S_t^T q_t
+
+with per-step scalar log-decay g_t <= 0.  The chunked form computes, for
+chunk-local cumulative decays d_t = sum_{tau<=t} g_tau:
+
+    intra: y_t += sum_{j<=t} exp(d_t - d_j) (q_t . k_j) v_j   (C x C block)
+    inter: y_t += exp(d_t) S_prev^T q_t
+    state: S_new = exp(d_C) S_prev + sum_j exp(d_C - d_j) k_j v_j^T
+
+All decay factors are <= 1 (g <= 0), so the chunked math is stable in bf16
+activations with f32 decay accumulators.  The chunk size trades the
+quadratic intra-chunk block against the sequential inter-chunk scan — a TPU
+tiling knob (MXU-friendly C x C blocks) rather than a GPU warp trick.
+
+The O(1)-state ``step`` form drives long-context decode (long_500k).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _chunk_cumsum(g: jnp.ndarray, chunk: int) -> jnp.ndarray:
+    """(B, S, H) -> (B, NC, C, H) within-chunk inclusive cumsum (f32)."""
+    B, S, H = g.shape
+    gc = g.reshape(B, S // chunk, chunk, H).astype(jnp.float32)
+    return jnp.cumsum(gc, axis=2)
+
+
+def chunked_gla(
+    q: jnp.ndarray,  # (B, S, H, dk)
+    k: jnp.ndarray,  # (B, S, H, dk)
+    v: jnp.ndarray,  # (B, S, H, dv)
+    log_decay: jnp.ndarray,  # (B, S, H) f32, <= 0
+    *,
+    chunk_size: int = 256,
+    initial_state: jnp.ndarray | None = None,  # (B, H, dk, dv)
+    normalize: bool = False,
+):
+    """Returns (y (B,S,H,dv), final_state (B,H,dk,dv[+1 if normalize])).
+
+    normalize=True appends a ones-column to v so the state also accumulates
+    the normalizer n_t = sum decayed k_j; outputs are y/max(|q.n|, 1)
+    (mLSTM-style stabilization — see models/xlstm.py).
+    """
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    C = min(chunk_size, S)
+    assert S % C == 0, (S, C)
+    NC = S // C
+    if normalize:
+        v = jnp.concatenate([v, jnp.ones(v.shape[:-1] + (1,), v.dtype)], axis=-1)
+        dv_t = dv + 1
+    else:
+        dv_t = dv
+
+    d = _chunk_cumsum(log_decay, C)  # (B, NC, C, H)
+    total = d[:, :, -1, :]  # (B, NC, H)
+
+    qc = q.reshape(B, NC, C, H, dk)
+    kc = k.reshape(B, NC, C, H, dk)
+    vc = v.reshape(B, NC, C, H, dv_t)
+
+    # ---- intra-chunk (parallel over chunks) -------------------------------
+    # A[t, j] = (q_t . k_j) * exp(d_t - d_j) for j <= t
+    scores = jnp.einsum("bnthd,bnjhd->bnhtj", qc, kc, preferred_element_type=jnp.float32)
+    decay_tj = d[:, :, :, None, :].transpose(0, 1, 4, 2, 3) - d[:, :, None, :, :].transpose(0, 1, 4, 2, 3)
+    # decay_tj: (B, NC, H, C_t, C_j) = d_t - d_j
+    causal = jnp.tril(jnp.ones((C, C), bool))
+    A = jnp.where(causal, scores * jnp.exp(jnp.minimum(decay_tj, 0.0)), 0.0)
+    y_intra = jnp.einsum("bnhtj,bnjhd->bnthd", A.astype(v.dtype), vc)
+
+    # ---- chunk state deltas ------------------------------------------------
+    # decay from step j to end of chunk: exp(d_C - d_j)
+    tail = jnp.exp((total[:, :, None, :] - d))  # (B, NC, C, H)
+    dS = jnp.einsum("bnjhd,bnjhe->bnhde", kc * tail[..., None].astype(k.dtype), vc)
+
+    # ---- inter-chunk scan (sequential over NC) -----------------------------
+    if initial_state is None:
+        S0 = jnp.zeros((B, H, dk, dv_t), jnp.float32)
+    else:
+        S0 = initial_state.astype(jnp.float32)
+
+    def scan_body(S_prev, xs):
+        dS_c, total_c = xs  # (B,H,dk,dv_t), (B,H)
+        S_pre = S_prev  # state visible to this chunk
+        S_next = jnp.exp(total_c)[..., None, None] * S_prev + dS_c.astype(jnp.float32)
+        return S_next, S_pre
+
+    dS_sw = jnp.moveaxis(dS, 1, 0)  # (NC, B, H, dk, dv_t)
+    total_sw = jnp.moveaxis(total, 1, 0)  # (NC, B, H)
+    S_final, S_prevs = jax.lax.scan(scan_body, S0, (dS_sw, total_sw))
+    S_prevs = jnp.moveaxis(S_prevs, 0, 1)  # (B, NC, H, dk, dv_t)
+
+    # ---- inter-chunk contribution ------------------------------------------
+    q_decayed = qc * jnp.exp(d)[..., None].astype(q.dtype)
+    y_inter = jnp.einsum("bnthd,bnhde->bnthe", q_decayed, S_prevs.astype(q.dtype))
+
+    y = (y_intra + y_inter).reshape(B, S, H, dv_t)
+    if normalize:
+        num, den = y[..., :dv], y[..., dv]
+        y = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    return y.astype(v.dtype), S_final
+
+
+def gla_step(
+    state: jnp.ndarray,  # (B, H, dk, dv)
+    q: jnp.ndarray,  # (B, H, dk)
+    k: jnp.ndarray,
+    v: jnp.ndarray,  # (B, H, dv)
+    log_decay: jnp.ndarray,  # (B, H)
+    *,
+    normalize: bool = False,
+):
+    """One recurrent step (decode path; O(1) state, no KV cache)."""
+    if normalize:
+        v = jnp.concatenate([v, jnp.ones(v.shape[:-1] + (1,), v.dtype)], axis=-1)
+    state = jnp.exp(log_decay.astype(jnp.float32))[..., None, None] * state + jnp.einsum(
+        "bhk,bhv->bhkv", k.astype(jnp.float32), v.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhk,bhkv->bhv", q.astype(jnp.float32), state)
+    if normalize:
+        dv = v.shape[-1] - 1
+        y = y[..., :dv] / jnp.maximum(jnp.abs(y[..., dv]), 1.0)[..., None]
+    return y.astype(v.dtype), state
+
+
+def slstm_scan(
+    f_logit: jnp.ndarray,  # (B, S, H) forget gate pre-activation
+    i_logit: jnp.ndarray,  # (B, S, H) input gate pre-activation (exp-gated)
+    z: jnp.ndarray,  # (B, S, H, dh) cell input
+    o: jnp.ndarray,  # (B, S, H, dh) output gate (post-sigmoid applied here)
+    i_clamp: float = 8.0,
+):
+    """Parallel sLSTM-style scalar recurrence via associative scan.
+
+    c_t = f_t c_{t-1} + i_t z_t ;  n_t = f_t n_{t-1} + i_t ;
+    h_t = sigmoid(o_t) * c_t / max(n_t, 1)
+    with f = sigmoid(f_logit), i = exp(min(i_logit, clamp)).
+
+    Note: the literal sLSTM feeds h_{t-1} back into the gates (non-
+    associative).  We use the input-conditioned variant so the recurrence is
+    a first-order linear scan — a TPU-friendly re-derivation; see DESIGN.md.
+    """
+    f = jax.nn.sigmoid(f_logit.astype(jnp.float32))[..., None]
+    i = jnp.exp(jnp.minimum(i_logit.astype(jnp.float32), i_clamp))[..., None]
+    zi = i * jnp.tanh(z.astype(jnp.float32))
+    ni = jnp.broadcast_to(i, z.shape[:-1] + (1,))
+
+    def combine(a, b):
+        (fa, ca) = a
+        (fb, cb) = b
+        return (fa * fb, fb * ca + cb)
+
+    # stack cell and normalizer as extra channel
+    cn = jnp.concatenate([zi, ni], axis=-1)
+    fs = jnp.broadcast_to(f, cn.shape)
+    _, cn_t = jax.lax.associative_scan(combine, (fs, cn), axis=1)
+    c_t, n_t = cn_t[..., :-1], cn_t[..., -1:]
+    h = jax.nn.sigmoid(o.astype(jnp.float32)) * c_t / jnp.maximum(n_t, 1.0)
+    return h.astype(z.dtype)
+
+
+def slstm_step(state, f_logit, i_logit, z, o, i_clamp: float = 8.0):
+    """One sLSTM step; state = (c (B,H,dh), n (B,H,1))."""
+    c, n = state
+    f = jax.nn.sigmoid(f_logit.astype(jnp.float32))[..., None]
+    i = jnp.exp(jnp.minimum(i_logit.astype(jnp.float32), i_clamp))[..., None]
+    c = f * c + i * jnp.tanh(z.astype(jnp.float32))
+    n = f * n + i
+    h = jax.nn.sigmoid(o.astype(jnp.float32)) * c / jnp.maximum(n, 1.0)
+    return h.astype(z.dtype), (c, n)

@@ -1,0 +1,130 @@
+"""Mamba-2 (SSD) block on the chunked gated-linear-attention engine.
+
+Mapping onto chunked_gla (per head h of head_dim P, state size N):
+    g_t = dt_t * (-exp(A_log_h))          (scalar log-decay, <= 0)
+    k_t = B_t   (shape N, shared within a group, GQA-style)
+    v_t = dt_t * x_t                      (shape P)
+    q_t = C_t   (shape N)
+so S_t is the (N x P) SSD state and y_t = C_t . S_t, plus the D*x skip.
+
+Decode uses the O(1) recurrent ``gla_step`` + a (conv_width-1) rolling
+buffer for the causal depthwise conv — no KV cache, which is what makes
+long_500k decodable at batch 1 (the assignment's sub-quadratic cell).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig, ParamSpec
+from .layers import rmsnorm
+from .linear_attention import chunked_gla, gla_step
+
+
+def mamba2_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_in = cfg.d_inner
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    H = cfg.ssm_heads
+    conv_ch = d_in + 2 * G * N
+    return {
+        "in_proj": ParamSpec(
+            (d, 2 * d_in + 2 * G * N + H), cfg.param_dtype, ("embed", "act_mlp")
+        ),
+        "conv_w": ParamSpec((cfg.conv_width, conv_ch), cfg.param_dtype, ("conv", "act_mlp")),
+        "conv_b": ParamSpec((conv_ch,), cfg.param_dtype, ("act_mlp",), init="zeros"),
+        "A_log": ParamSpec((H,), jnp.float32, (None,), init="zeros"),
+        "D": ParamSpec((H,), jnp.float32, (None,), init="ones"),
+        "dt_bias": ParamSpec((H,), jnp.float32, (None,), init="zeros"),
+        "norm": ParamSpec((d_in,), jnp.float32, (None,), init="ones"),
+        "out_proj": ParamSpec((d_in, d), cfg.param_dtype, ("mlp", "embed"), init="scaled"),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jnp.ndarray):
+    d_in, G, N, H = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in : 2 * d_in + 2 * G * N]
+    dt = zxbcdt[..., 2 * d_in + 2 * G * N :]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv over seq: xBC (B,S,Ch), w (W,Ch)."""
+    W = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xBC.shape[1], :] * w[i][None, None, :] for i in range(W)
+    )
+    return jax.nn.silu(out + b)
+
+
+def mamba2_forward(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Full-sequence forward (train / prefill). x: (B, S, d)."""
+    B, S, _ = x.shape
+    G, N, H, P = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    dt_ = cfg.dtype
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["in_proj"].astype(dt_))
+    z, xBC, dt_raw = _split_proj(cfg, zxbcdt)
+    xBC = _causal_conv(xBC, p["conv_w"].astype(dt_), p["conv_b"].astype(dt_))
+    xs = xBC[..., : cfg.d_inner].reshape(B, S, H, P)
+    Bmat = xBC[..., cfg.d_inner : cfg.d_inner + G * N].reshape(B, S, G, N)
+    Cmat = xBC[..., cfg.d_inner + G * N :].reshape(B, S, G, N)
+    rep = H // G
+    k = jnp.repeat(Bmat, rep, axis=2)  # (B,S,H,N)
+    q = jnp.repeat(Cmat, rep, axis=2)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    log_decay = -jnp.exp(p["A_log"]) * dt  # <= 0
+    v = xs * dt[..., None].astype(dt_)
+    y, _ = chunked_gla(q, k, v, log_decay, chunk_size=cfg.chunk_size)
+    y = y + p["D"].astype(dt_)[None, None, :, None] * xs
+    y = y.reshape(B, S, cfg.d_inner)
+    y = rmsnorm(y, p["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return jnp.einsum("bsk,kd->bsd", y, p["out_proj"].astype(dt_))
+
+
+class MambaState(NamedTuple):
+    ssm: jnp.ndarray  # (B, H, N, P) f32
+    conv: jnp.ndarray  # (B, W-1, Ch) rolling conv buffer
+
+
+def mamba2_init_state(cfg: ModelConfig, batch: int) -> MambaState:
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    conv_ch = cfg.d_inner + 2 * G * N
+    return MambaState(
+        ssm=jnp.zeros((batch, cfg.ssm_heads, N, cfg.ssm_head_dim), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_width - 1, conv_ch), cfg.dtype),
+    )
+
+
+def mamba2_step(p: dict, state: MambaState, x: jnp.ndarray, cfg: ModelConfig):
+    """One decode token. x: (B, d) -> (y (B, d), state')."""
+    B, _ = x.shape
+    G, N, H, P = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    dt_ = cfg.dtype
+    zxbcdt = jnp.einsum("bd,dk->bk", x, p["in_proj"].astype(dt_))
+    z, xBC, dt_raw = _split_proj(cfg, zxbcdt)
+    # rolling conv buffer: state.conv holds the previous W-1 inputs
+    W = cfg.conv_width
+    w = p["conv_w"].astype(dt_)
+    hist = jnp.concatenate([state.conv, xBC[:, None, :]], axis=1)  # (B, W, Ch)
+    conv_out = jax.nn.silu(jnp.einsum("bwc,wc->bc", hist, w) + p["conv_b"].astype(dt_))
+    new_conv = hist[:, 1:, :]
+    xs = conv_out[..., : cfg.d_inner].reshape(B, H, P)
+    Bmat = conv_out[..., cfg.d_inner : cfg.d_inner + G * N].reshape(B, G, N)
+    Cmat = conv_out[..., cfg.d_inner + G * N :].reshape(B, G, N)
+    rep = H // G
+    k = jnp.repeat(Bmat, rep, axis=1)
+    q = jnp.repeat(Cmat, rep, axis=1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    log_decay = -jnp.exp(p["A_log"]) * dt
+    v = xs * dt[..., None].astype(dt_)
+    y, ssm = gla_step(state.ssm, q, k, v, log_decay)
+    y = y + p["D"].astype(dt_)[None, :, None] * xs
+    y = y.reshape(B, cfg.d_inner)
+    y = rmsnorm(y, p["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = jnp.einsum("bk,kd->bd", y, p["out_proj"].astype(dt_))
+    return out, MambaState(ssm=ssm, conv=new_conv)

@@ -1,0 +1,216 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM is gated linear attention with exponential input gates and a
+normalizer state — it reuses ``chunked_gla(normalize=True)`` with the input
+gate folded into k.  Exponential gates are clamped (<= 8 in log space)
+instead of carrying the paper's running-max stabilizer; with the normalizer
+division the outputs match the reference recurrence to fp32 tolerance on
+realistic gate ranges (tested), and the chunked math stays a pair of
+MXU-friendly (C x C) matmuls.
+
+sLSTM is the scalar-memory recurrence; we use the input-conditioned variant
+(gates do not read h_{t-1}) so the whole layer is one associative scan —
+O(log S) depth on TPU instead of an S-step serial loop.  This is the main
+TPU adaptation for this architecture (documented in DESIGN.md): the exact
+h-feedback variant has a serial dependence with no parallel form.
+
+Blocks follow xLSTM-1.3B structure: pre-norm residual blocks with internal
+up/down projection (no separate FFN; d_ff = 0 in the config).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig, ParamSpec
+from .layers import rmsnorm
+from .linear_attention import chunked_gla, gla_step, slstm_scan, slstm_step
+
+I_CLAMP = 8.0
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+
+def mlstm_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_up = 2 * d  # xLSTM projection factor 2
+    H = cfg.num_heads
+    dk = d_up // H
+    return {
+        "norm": ParamSpec((d,), jnp.float32, (None,), init="ones"),
+        "up": ParamSpec((d, 2 * d_up), cfg.param_dtype, ("embed", "mlp")),
+        "conv_w": ParamSpec((cfg.conv_width, d_up), cfg.param_dtype, ("conv", "act_mlp")),
+        "conv_b": ParamSpec((d_up,), cfg.param_dtype, ("act_mlp",), init="zeros"),
+        # block-diagonal per-head projections (xLSTM's BlockLinear): each
+        # head projects its own d_up/H slice — H x dk x dk, not d_up x d_up
+        "wq": ParamSpec((H, dk, dk), cfg.param_dtype, ("heads", "head_dim", None)),
+        "wk": ParamSpec((H, dk, dk), cfg.param_dtype, ("heads", "head_dim", None)),
+        "wv": ParamSpec((H, dk, dk), cfg.param_dtype, ("heads", "head_dim", None)),
+        "w_igate": ParamSpec((d_up, H), jnp.float32, ("mlp", "heads"), init="zeros"),
+        "w_fgate": ParamSpec((d_up, H), jnp.float32, ("mlp", "heads"), init="zeros"),
+        "b_igate": ParamSpec((H,), jnp.float32, (None,), init="zeros"),
+        "b_fgate": ParamSpec((H,), jnp.float32, (None,), init="ones"),
+        "out_norm": ParamSpec((d_up,), jnp.float32, (None,), init="ones"),
+        "down": ParamSpec((d_up, d), cfg.param_dtype, ("mlp", "embed"), init="scaled"),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    W = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(W))
+    return jax.nn.silu(out + b)
+
+
+def _mlstm_qkv_gates(p: dict, xm: jnp.ndarray, xc: jnp.ndarray, cfg: ModelConfig):
+    """Shared between forward and step: q,k,v + log gates from conv/raw path."""
+    d_up = xm.shape[-1]
+    H = cfg.num_heads
+    dk = d_up // H
+    dt = cfg.dtype
+    xc_h = xc.reshape(xc.shape[:-1] + (H, dk))
+    xm_h = xm.reshape(xm.shape[:-1] + (H, dk))
+    q = jnp.einsum("...hk,hkd->...hd", xc_h, p["wq"].astype(dt))
+    k = jnp.einsum("...hk,hkd->...hd", xc_h, p["wk"].astype(dt)) / (dk**0.5)
+    v = jnp.einsum("...hk,hkd->...hd", xm_h, p["wv"].astype(dt))
+    i_logit = jnp.einsum("...k,kh->...h", xc.astype(jnp.float32), p["w_igate"]) + p["b_igate"]
+    f_logit = jnp.einsum("...k,kh->...h", xc.astype(jnp.float32), p["w_fgate"]) + p["b_fgate"]
+    log_f = jax.nn.log_sigmoid(f_logit)
+    i_gate = jnp.exp(jnp.minimum(i_logit, I_CLAMP))
+    k = k * i_gate[..., None].astype(dt)  # fold input gate into keys
+    return q, k, v, log_f
+
+
+def mlstm_forward(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    B, S, d = x.shape
+    d_up = 2 * d
+    dt = cfg.dtype
+    xn = rmsnorm(x, p["norm"], cfg.norm_eps)
+    proj = jnp.einsum("bsd,dk->bsk", xn, p["up"].astype(dt))
+    xm, z = proj[..., :d_up], proj[..., d_up:]
+    xc = _causal_conv(xm, p["conv_w"].astype(dt), p["conv_b"].astype(dt))
+    q, k, v, log_f = _mlstm_qkv_gates(p, xm, xc, cfg)
+    h, _ = chunked_gla(q, k, v, log_f, chunk_size=cfg.chunk_size, normalize=True)
+    h = h.reshape(B, S, d_up)
+    h = rmsnorm(h, p["out_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return x + jnp.einsum("bsk,kd->bsd", h, p["down"].astype(dt))
+
+
+class MLSTMState(NamedTuple):
+    s: jnp.ndarray  # (B, H, dk, dk+1) matrix memory + normalizer column
+    conv: jnp.ndarray  # (B, W-1, d_up)
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int) -> MLSTMState:
+    d_up = 2 * cfg.d_model
+    dk = d_up // cfg.num_heads
+    return MLSTMState(
+        s=jnp.zeros((batch, cfg.num_heads, dk, dk + 1), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_width - 1, d_up), cfg.dtype),
+    )
+
+
+def mlstm_block_step(p: dict, state: MLSTMState, x: jnp.ndarray, cfg: ModelConfig):
+    B, d = x.shape
+    d_up = 2 * d
+    dt = cfg.dtype
+    xn = rmsnorm(x, p["norm"], cfg.norm_eps)
+    proj = jnp.einsum("bd,dk->bk", xn, p["up"].astype(dt))
+    xm, z = proj[..., :d_up], proj[..., d_up:]
+    hist = jnp.concatenate([state.conv, xm[:, None, :]], axis=1)
+    xc = jax.nn.silu(jnp.einsum("bwc,wc->bc", hist, p["conv_w"].astype(dt)) + p["conv_b"].astype(dt))
+    q, k, v, log_f = _mlstm_qkv_gates(p, xm, xc, cfg)
+    h, s = gla_step(state.s, q, k, v, log_f, normalize=True)
+    h = h.reshape(B, d_up)
+    h = rmsnorm(h, p["out_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = x + jnp.einsum("bk,kd->bd", h, p["down"].astype(dt))
+    return out, MLSTMState(s=s, conv=hist[:, 1:, :])
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block
+# ---------------------------------------------------------------------------
+
+
+def slstm_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    f_up = (4 * d) // 3
+    return {
+        "norm": ParamSpec((d,), jnp.float32, (None,), init="ones"),
+        "conv_w": ParamSpec((cfg.conv_width, d), cfg.param_dtype, ("conv", "act_mlp")),
+        "conv_b": ParamSpec((d,), cfg.param_dtype, ("act_mlp",), init="zeros"),
+        "w_gates": ParamSpec((d, 4, H, dh), cfg.param_dtype, ("embed", None, "heads", "head_dim")),
+        "b_gates": ParamSpec((4, H, dh), cfg.param_dtype, (None, "heads", "head_dim"), init="zeros"),
+        "out_norm": ParamSpec((d,), jnp.float32, (None,), init="ones"),
+        # gated FFN with 4/3 projection factor (xLSTM paper)
+        "ffn_gate": ParamSpec((d, f_up), cfg.param_dtype, ("embed", "mlp")),
+        "ffn_up": ParamSpec((d, f_up), cfg.param_dtype, ("embed", "mlp")),
+        "ffn_down": ParamSpec((f_up, d), cfg.param_dtype, ("mlp", "embed"), init="scaled"),
+    }
+
+
+def _slstm_gates(p: dict, xc: jnp.ndarray, cfg: ModelConfig):
+    g = jnp.einsum("...d,dghk->...ghk", xc, p["w_gates"].astype(cfg.dtype)) + p["b_gates"].astype(cfg.dtype)
+    i_l = jnp.mean(g[..., 0, :, :], axis=-1).astype(jnp.float32)  # (…, H)
+    f_l = jnp.mean(g[..., 1, :, :], axis=-1).astype(jnp.float32)
+    z = g[..., 2, :, :]
+    o = g[..., 3, :, :]
+    return f_l, i_l, z, o
+
+
+def slstm_forward(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    B, S, d = x.shape
+    H = cfg.num_heads
+    dt = cfg.dtype
+    xn = rmsnorm(x, p["norm"], cfg.norm_eps)
+    xc = _causal_conv(xn, p["conv_w"].astype(dt), p["conv_b"].astype(dt))
+    f_l, i_l, z, o = _slstm_gates(p, xc, cfg)
+    h = slstm_scan(f_l, i_l, z, o, I_CLAMP)  # (B,S,H,dh)
+    h = h.reshape(B, S, d)
+    x = x + rmsnorm(h, p["out_norm"], cfg.norm_eps)
+    # gated FFN
+    xn2 = rmsnorm(x, p["norm"], cfg.norm_eps)
+    gate = jnp.einsum("bsd,df->bsf", xn2, p["ffn_gate"].astype(dt))
+    up = jnp.einsum("bsd,df->bsf", xn2, p["ffn_up"].astype(dt))
+    return x + jnp.einsum("bsf,fd->bsd", jax.nn.silu(gate) * up, p["ffn_down"].astype(dt))
+
+
+class SLSTMState(NamedTuple):
+    c: jnp.ndarray  # (B, H, dh)
+    n: jnp.ndarray  # (B, H, 1)
+    conv: jnp.ndarray  # (B, W-1, d)
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int) -> SLSTMState:
+    d = cfg.d_model
+    H = cfg.num_heads
+    return SLSTMState(
+        c=jnp.zeros((batch, H, d // H), jnp.float32),
+        n=jnp.zeros((batch, H, 1), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_width - 1, d), cfg.dtype),
+    )
+
+
+def slstm_block_step(p: dict, state: SLSTMState, x: jnp.ndarray, cfg: ModelConfig):
+    B, d = x.shape
+    dt = cfg.dtype
+    xn = rmsnorm(x, p["norm"], cfg.norm_eps)
+    hist = jnp.concatenate([state.conv, xn[:, None, :]], axis=1)
+    xc = jax.nn.silu(jnp.einsum("bwc,wc->bc", hist, p["conv_w"].astype(dt)) + p["conv_b"].astype(dt))
+    f_l, i_l, z, o = _slstm_gates(p, xc, cfg)
+    h, (c, n) = slstm_step((state.c, state.n), f_l, i_l, z, o, I_CLAMP)
+    h = h.reshape(B, d)
+    x = x + rmsnorm(h, p["out_norm"], cfg.norm_eps)
+    xn2 = rmsnorm(x, p["norm"], cfg.norm_eps)
+    gate = jnp.einsum("bd,df->bf", xn2, p["ffn_gate"].astype(dt))
+    up = jnp.einsum("bd,df->bf", xn2, p["ffn_up"].astype(dt))
+    out = x + jnp.einsum("bf,fd->bd", jax.nn.silu(gate) * up, p["ffn_down"].astype(dt))
+    return out, SLSTMState(c=c, n=n, conv=hist[:, 1:, :])

@@ -1,0 +1,23 @@
+"""Sharding substrate: logical axis rules -> mesh PartitionSpecs."""
+
+from .logical import (
+    LogicalRules,
+    activation_rules,
+    active_rules,
+    constrain,
+    default_rules,
+    param_sharding,
+    spec_for,
+    use_rules,
+)
+
+__all__ = [
+    "LogicalRules",
+    "activation_rules",
+    "active_rules",
+    "constrain",
+    "default_rules",
+    "param_sharding",
+    "spec_for",
+    "use_rules",
+]

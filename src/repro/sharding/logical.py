@@ -1,0 +1,165 @@
+"""Logical-axis sharding: one rule table maps model code to any mesh.
+
+Model code annotates parameters and activations with *logical* axis names
+("embed", "heads", "batch", ...).  A :class:`LogicalRules` instance maps
+those to mesh axes, with divisibility-aware fallback: if a dimension does
+not divide evenly over its mesh axes the rule degrades to replication for
+that dimension (e.g. 40 experts on a 16-way model axis, or 8 KV heads on a
+16-way axis).  This keeps every (arch x shape x mesh) cell lowerable while
+letting well-shaped dims take the fast path.
+
+Parallelism mapping (see DESIGN.md):
+  batch        -> ("pod", "data")   pure DP across pods, DP within a pod
+  embed/layers -> "data"            FSDP (params + optimizer state)
+  heads/mlp/vocab/experts -> "model" TP / EP
+  seq_sp       -> "model"           sequence parallelism for saved
+                                     activations between layers
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class LogicalRules:
+    rules: dict[str, tuple[str, ...]]
+    mesh: Mesh | None = None
+
+    def mesh_axes(self, name: str | None) -> tuple[str, ...]:
+        if name is None:
+            return ()
+        return self.rules.get(name, ())
+
+    def _axis_size(self, axes: tuple[str, ...]) -> int:
+        if self.mesh is None:
+            return 1
+        size = 1
+        for a in axes:
+            size *= self.mesh.shape[a]
+        return size
+
+    def spec(self, logical_axes: tuple[str | None, ...], dims: tuple[int, ...] | None = None) -> P:
+        """PartitionSpec for logical axes; replicates non-divisible dims."""
+        out: list[Any] = []
+        used: set[str] = set()
+        for i, name in enumerate(logical_axes):
+            axes = tuple(a for a in self.mesh_axes(name) if a not in used)
+            if not axes:
+                out.append(None)
+                continue
+            if dims is not None and self.mesh is not None:
+                size = self._axis_size(axes)
+                if size <= 1 or dims[i] % size != 0:
+                    # try progressively shorter prefixes of the rule
+                    while axes and (dims[i] % self._axis_size(axes) != 0):
+                        axes = axes[:-1]
+                    if not axes:
+                        out.append(None)
+                        continue
+            used.update(axes)
+            out.append(axes if len(axes) > 1 else axes[0])
+        return P(*out)
+
+    def sharding(self, logical_axes: tuple[str | None, ...], dims: tuple[int, ...] | None = None):
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(logical_axes, dims))
+
+
+def default_rules(mesh: Mesh | None = None, *, sequence_parallel: bool = False) -> LogicalRules:
+    axis_names = set(mesh.axis_names) if mesh is not None else {"pod", "data", "model"}
+    dp: tuple[str, ...] = tuple(a for a in ("pod", "data") if a in axis_names)
+    tp: tuple[str, ...] = ("model",) if "model" in axis_names else ()
+    fsdp: tuple[str, ...] = ("data",) if "data" in axis_names else ()
+    rules = {
+        # activations
+        "batch": dp,
+        "seq": (),
+        "seq_sp": tp if sequence_parallel else (),
+        "act_embed": (),
+        "act_heads": tp,
+        "act_mlp": tp,
+        "act_vocab": tp,
+        "act_experts": tp,
+        "act_state": (),
+        # params
+        "embed": fsdp,
+        "layers": (),
+        "heads": tp,
+        "kv_heads": tp,
+        "head_dim": (),
+        "mlp": tp,
+        "vocab": tp,
+        "experts": tp,
+        "expert_mlp": (),
+        "conv": (),
+        "state": (),
+        "cache_seq": tp,
+    }
+    return LogicalRules(rules=rules, mesh=mesh)
+
+
+_local = threading.local()
+
+
+def active_rules() -> LogicalRules | None:
+    return getattr(_local, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: LogicalRules):
+    prev = getattr(_local, "rules", None)
+    _local.rules = rules
+    try:
+        yield rules
+    finally:
+        _local.rules = prev
+
+
+def constrain(x, logical_axes: tuple[str | None, ...]):
+    """Annotate an activation with logical axes (no-op outside a mesh)."""
+    rules = active_rules()
+    if rules is None or rules.mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, rules.spec(logical_axes, tuple(x.shape)))
+    )
+
+
+def mesh_axis_size(axis: str) -> int:
+    """Size of a mesh axis under the active rules (1 when unmeshed)."""
+    rules = active_rules()
+    if rules is None or rules.mesh is None or axis not in rules.mesh.axis_names:
+        return 1
+    return rules.mesh.shape[axis]
+
+
+def spec_for(rules: LogicalRules, axes_tree, shape_tree):
+    """Map (logical axes pytree, ShapeDtypeStruct pytree) -> PartitionSpecs."""
+    return jax.tree.map(
+        lambda axes, sds: rules.spec(axes, tuple(sds.shape)),
+        axes_tree,
+        shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x),
+    )
+
+
+def param_sharding(rules: LogicalRules, axes_tree, shape_tree):
+    return jax.tree.map(
+        lambda axes, sds: rules.sharding(axes, tuple(sds.shape)),
+        axes_tree,
+        shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x),
+    )
+
+
+def activation_rules(axes: tuple[str | None, ...]):
+    """Convenience alias used by model code: ('batch','seq',...)."""
+    return axes

@@ -1,0 +1,14 @@
+"""Training substrate: optimizer, train loop, checkpointing, compression."""
+
+from .optimizer import AdamWConfig, TrainState, adamw_init, adamw_update, cosine_schedule
+from .train_loop import StepPlan, make_train_step
+
+__all__ = [
+    "AdamWConfig",
+    "StepPlan",
+    "TrainState",
+    "adamw_init",
+    "adamw_update",
+    "cosine_schedule",
+    "make_train_step",
+]

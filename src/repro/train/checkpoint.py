@@ -1,0 +1,170 @@
+"""Sharded, fault-tolerant checkpointing with elastic restore.
+
+Design (scaled-down from the multi-host layout, same invariants):
+  * one file per pytree leaf + a JSON manifest (step, tree structure,
+    shapes/dtypes, per-file SHA-256); leaves stream to disk via numpy;
+  * atomic commit: write to ``step_N.tmp/`` then os.rename -> ``step_N/``;
+    a crash mid-save never corrupts the latest checkpoint;
+  * async save: a background thread serializes device arrays snapshotted
+    at save() call time, so the train loop continues immediately;
+  * retention: keep the newest ``max_to_keep`` checkpoints;
+  * elastic restore: leaves are mmap'd and fed through
+    ``jax.make_array_from_callback`` against the *target* sharding, so a
+    checkpoint written on one mesh restores onto any other (different
+    device count / layout) reading only the local slices;
+  * corruption handling: hash mismatch or unreadable files fail that
+    checkpoint and restore falls back to the next older one.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import queue
+import shutil
+import threading
+from typing import Any
+
+import numpy as np
+
+import jax
+
+
+def _leaf_paths(tree) -> list[tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        name = "_".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))) for p in path
+        )
+        out.append((name or "leaf", leaf))
+    return out
+
+
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, max_to_keep: int = 3, async_save: bool = True):
+        self.directory = directory
+        self.max_to_keep = max_to_keep
+        os.makedirs(directory, exist_ok=True)
+        self._queue: queue.Queue = queue.Queue()
+        self._errors: list[str] = []
+        self._async = async_save
+        self._thread = None
+        if async_save:
+            self._thread = threading.Thread(target=self._worker, daemon=True)
+            self._thread.start()
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, state) -> None:
+        """Snapshot to host (blocking) then write async (or inline)."""
+        host_state = jax.tree.map(lambda x: np.asarray(x), state)
+        if self._async:
+            self._queue.put((step, host_state))
+        else:
+            self._write(step, host_state)
+
+    def wait(self) -> None:
+        if self._async:
+            self._queue.join()
+        if self._errors:
+            raise RuntimeError("; ".join(self._errors))
+
+    def _worker(self) -> None:
+        while True:
+            step, host_state = self._queue.get()
+            try:
+                self._write(step, host_state)
+            except Exception as e:  # surfaced on wait()
+                self._errors.append(f"save step {step}: {e}")
+            finally:
+                self._queue.task_done()
+
+    def _write(self, step: int, host_state) -> None:
+        final = os.path.join(self.directory, f"step_{step:010d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        leaves = _leaf_paths(host_state)
+        manifest = {"step": step, "leaves": []}
+        for i, (name, leaf) in enumerate(leaves):
+            fname = f"{i:05d}_{name[:128]}.npy"
+            fpath = os.path.join(tmp, fname)
+            np.save(fpath, leaf)
+            manifest["leaves"].append(
+                {
+                    "name": name,
+                    "file": fname,
+                    "shape": list(np.shape(leaf)),
+                    "dtype": str(np.asarray(leaf).dtype),
+                    "sha256": _sha256(fpath),
+                }
+            )
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic commit
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.max_to_keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:010d}"), ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.directory):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                try:
+                    out.append(int(d[5:]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def _load_one(self, step: int, target_tree, shardings=None, verify: bool = True):
+        ckpt = os.path.join(self.directory, f"step_{step:010d}")
+        with open(os.path.join(ckpt, "manifest.json")) as f:
+            manifest = json.load(f)
+        leaves, treedef = jax.tree_util.tree_flatten(target_tree)
+        entries = manifest["leaves"]
+        if len(entries) != len(leaves):
+            raise ValueError(
+                f"checkpoint step {step}: {len(entries)} leaves vs target {len(leaves)}"
+            )
+        shard_leaves = jax.tree_util.tree_leaves(shardings) if shardings is not None else [None] * len(leaves)
+        out = []
+        for entry, target, shd in zip(entries, leaves, shard_leaves):
+            fpath = os.path.join(ckpt, entry["file"])
+            if verify and _sha256(fpath) != entry["sha256"]:
+                raise IOError(f"hash mismatch in {fpath}")
+            arr = np.load(fpath, mmap_mode="r")
+            if tuple(arr.shape) != tuple(target.shape):
+                raise ValueError(f"{entry['name']}: shape {arr.shape} vs {target.shape}")
+            if shd is not None:
+                out.append(
+                    jax.make_array_from_callback(tuple(arr.shape), shd, lambda idx, a=arr: np.asarray(a[idx]))
+                )
+            else:
+                out.append(np.asarray(arr))
+        return jax.tree_util.tree_unflatten(treedef, out), manifest["step"]
+
+    def restore_latest(self, target_tree, shardings=None, verify: bool = True):
+        """Restore the newest intact checkpoint; falls back past corrupted
+        ones. Returns (state, step) or None when nothing restorable."""
+        for step in reversed(self.all_steps()):
+            try:
+                return self._load_one(step, target_tree, shardings, verify)
+            except Exception:
+                continue
+        return None

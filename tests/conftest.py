@@ -1,0 +1,9 @@
+"""Test config: CPU, single device (dry-run tests spawn subprocesses)."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,47 @@
+"""Dry-run machinery on a tiny 2x2x2 mesh (subprocess; reduced configs).
+
+The production 512-device sweep runs via ``python -m repro.launch.dryrun
+--all --both-meshes`` (artifacts in experiments/dryrun); this test keeps
+the launcher honest in CI-scale time: one train, one prefill, one decode,
+one MoE, one recurrent cell must lower + compile + analyze on 8 devices.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+CELLS = [
+    ("qwen1.5-0.5b", "train_4k"),
+    ("olmoe-1b-7b", "train_4k"),
+    ("xlstm-1.3b", "decode_32k"),
+    ("zamba2-7b", "long_500k"),
+    ("seamless-m4t-large-v2", "prefill_32k"),
+    ("mistral-large-123b", "decode_32k"),
+]
+
+
+@pytest.mark.parametrize("arch,shape", CELLS)
+def test_dryrun_cell_smoke_mesh(arch, shape, tmp_path):
+    env = {
+        **os.environ,
+        "PYTHONPATH": "src",
+        "REPRO_DRYRUN_DEVICES": "8",
+    }
+    r = subprocess.run(
+        [
+            sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", arch, "--shape", shape, "--smoke", "--test-mesh",
+            "--out", str(tmp_path),
+        ],
+        capture_output=True, text=True, timeout=900, env=env,
+    )
+    assert r.returncode == 0, (r.stdout[-1500:], r.stderr[-1500:])
+    files = [f for f in os.listdir(tmp_path) if f.endswith(".json")]
+    assert len(files) == 1
+    rec = json.load(open(os.path.join(tmp_path, files[0])))
+    assert rec["status"] == "ok", rec.get("error")
+    assert rec["hlo_cost"]["flops"] > 0
+    assert rec["roofline"]["dominant"] in ("compute", "memory", "collective")

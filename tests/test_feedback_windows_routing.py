@@ -1,0 +1,106 @@
+"""Feedback controller convergence, window semantics, spatial routing."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    SLO,
+    contiguous_plan,
+    balanced_plan,
+    feedback,
+    make_table,
+    routing,
+    windows,
+    SHENZHEN_BBOX,
+)
+from repro.core.pipeline import EdgeCloudPipeline
+from repro.data.streams import shenzhen_taxi_stream
+
+
+def test_controller_closed_loop_converges(rng):
+    """Running the real pipeline under the controller drives RE to the SLO
+    (or the fraction to a bound)."""
+    table = make_table(*SHENZHEN_BBOX, precision=5)
+    pipe = EdgeCloudPipeline(table)
+    slo = SLO(target_relative_error=0.002, min_fraction=0.02, max_fraction=1.0)
+    wnds = list(windows.count_windows(shenzhen_taxi_stream(num_chunks=8, seed=2), 20_000))
+    history, state = pipe.run_stream(wnds, slo=slo, initial_fraction=0.5)
+    res = [float(h[0].estimate.relative_error) for h in history]
+    fr = [h[1] for h in history]
+    # controller should move fraction and keep late-window RE near target
+    late = np.mean(res[-3:])
+    assert late < 0.004 or fr[-1] == pytest.approx(1.0)
+    assert not np.allclose(fr, fr[0])
+
+
+def test_controller_lowers_fraction_when_easy():
+    st = feedback.init_state(0.9)
+    slo = SLO(target_relative_error=0.1, min_fraction=0.05)
+    for _ in range(6):
+        st = feedback.update(st, jnp.float32(0.001), jnp.int32(10_000), slo)
+    assert float(st.fraction) < 0.3
+
+
+def test_controller_raises_fraction_when_hard():
+    st = feedback.init_state(0.2)
+    slo = SLO(target_relative_error=0.01)
+    for _ in range(6):
+        st = feedback.update(st, jnp.float32(0.2), jnp.int32(10_000), slo)
+    assert float(st.fraction) > 0.6
+
+
+def test_latency_budget_caps_fraction():
+    st = feedback.init_state(0.9)
+    slo = SLO(target_relative_error=0.0001, max_downstream_tuples=1_000)
+    st = feedback.update(st, jnp.float32(0.5), jnp.int32(20_000), slo)
+    assert float(st.fraction) <= 0.05 + 1e-6
+
+
+def test_count_windows_exact_sizes():
+    wnds = list(windows.count_windows(shenzhen_taxi_stream(num_chunks=3, chunk_size=7_000), 10_000))
+    assert len(wnds) == 2
+    assert all(w.capacity == 10_000 and w.size == 10_000 for w in wnds)
+
+
+def test_time_windows_padding():
+    wnds = list(
+        windows.time_windows(shenzhen_taxi_stream(num_chunks=4, chunk_size=5_000), 60.0, capacity=6_000)
+    )
+    assert len(wnds) >= 3
+    for w in wnds:
+        assert w.capacity == 6_000
+        assert w.size <= 6_000
+        assert np.all(w.valid[: w.size])
+
+
+def test_routing_contiguous_and_balanced(rng):
+    table = make_table(*SHENZHEN_BBOX, precision=5, neighborhood_precision=3)
+    plan = contiguous_plan(table, num_shards=4)
+    assert int(plan.dest_of_stratum.max()) <= 3
+    sidx = jnp.asarray(rng.integers(0, table.num_strata, 10_000), jnp.int32)
+    counts = routing.route_counts(plan, sidx)
+    assert int(counts.sum()) == 10_000
+    # balanced plan should not be worse than contiguous on skewed load
+    load = np.zeros(table.num_neighborhoods)
+    load[0] = 1000.0
+    load[1] = 900.0
+    bplan = balanced_plan(table, 4, load)
+    d0 = int(bplan.dest_of_neighborhood[0])
+    d1 = int(bplan.dest_of_neighborhood[1])
+    assert d0 != d1  # heaviest two neighborhoods on different shards
+
+
+def test_neighborhood_is_geohash_prefix():
+    table = make_table(*SHENZHEN_BBOX, precision=6, neighborhood_precision=4)
+    from repro.core import geohash as G
+
+    codes = np.asarray(table.codes)
+    parents = np.asarray(G.parent(jnp.asarray(codes), 6, 4))
+    nb = np.asarray(table.neighborhood)[:-1]
+    # same parent <=> same neighborhood id
+    for p in np.unique(parents)[:10]:
+        ids = nb[parents == p]
+        assert (ids == ids[0]).all()

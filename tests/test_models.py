@@ -1,0 +1,163 @@
+"""Per-arch smoke tests (reduced configs) + model-level invariants."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs, models
+from repro.models import encdec as E, transformer as T
+from repro.models.encdec import EncDecBatch
+from repro.models.transformer import Batch
+from repro.models.linear_attention import chunked_gla, gla_step
+
+
+def make_batch(cfg, rng, B=2, S=64):
+    ns = cfg.data_num_strata + 1
+    strata = rng.integers(0, 4, B).astype(np.int32)
+    counts = np.bincount(strata, minlength=ns).astype(np.int32)
+    common = dict(
+        seq_weight=jnp.ones(B, jnp.float32),
+        stratum=jnp.asarray(strata),
+        stratum_counts=jnp.asarray(counts),
+    )
+    if cfg.family == "encdec":
+        return EncDecBatch(
+            src_embeds=jnp.asarray(rng.normal(0, 1, (B, S, cfg.d_model)), jnp.float32),
+            tgt_tokens=jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+            targets=jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+            src_positions=jnp.broadcast_to(jnp.arange(S), (B, S)),
+            tgt_positions=jnp.broadcast_to(jnp.arange(S), (B, S)),
+            **common,
+        )
+    tokens = (
+        jnp.asarray(rng.normal(0, 1, (B, S, cfg.d_model)), jnp.float32)
+        if cfg.embeddings_in
+        else jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    )
+    positions = (
+        jnp.broadcast_to(jnp.arange(S), (3, B, S))
+        if cfg.mrope_sections
+        else jnp.broadcast_to(jnp.arange(S), (B, S))
+    )
+    return Batch(
+        tokens=tokens,
+        targets=jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+        positions=positions,
+        **common,
+    )
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_NAMES)
+def test_smoke_forward_and_decode(arch, rng):
+    """One loss eval + one decode step per arch: shapes + finiteness."""
+    cfg = configs.get_smoke_config(arch)
+    params = models.init_params(jax.random.key(0), models.param_specs(cfg))
+    batch = make_batch(cfg, rng)
+    loss, metrics = jax.jit(lambda p, b: models.loss_fn(p, cfg, b))(params, batch)
+    assert np.isfinite(float(loss)), arch
+    assert float(loss) < 2.0 * np.log(cfg.vocab_size)
+    assert np.isfinite(float(metrics["stratified_loss_mean"]))
+    if cfg.family == "encdec":
+        mem = E.encode(params, cfg, batch.src_embeds, batch.src_positions)
+        st = E.init_decode_state(params, cfg, mem, max_len=8)
+        logits, st2 = E.decode_step(params, cfg, st, jnp.zeros(2, jnp.int32))
+    else:
+        st = T.init_decode_state(cfg, 2, 8)
+        toks = (
+            jnp.zeros((2, cfg.d_model), jnp.float32) if cfg.embeddings_in else jnp.zeros(2, jnp.int32)
+        )
+        logits, st2 = T.decode_step(params, cfg, st, toks)
+        assert int(st2.pos) == 1
+    assert logits.shape == (2, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits[:, : cfg.vocab_size])))
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "xlstm-1.3b", "zamba2-7b"])
+def test_prefill_matches_stepwise_decode(arch, rng):
+    """Decoding token-by-token equals the parallel (chunked) forward:
+    logits at position t from prefill(t tokens) == decode chain.
+    f32 so recurrent-accumulation noise doesn't mask real bugs."""
+    cfg = configs.get_smoke_config(arch).replace(chunk_size=8, dtype=jnp.float32)
+    params = models.init_params(jax.random.key(0), models.param_specs(cfg))
+    S = 16
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, S)), jnp.int32)
+    pos = jnp.broadcast_to(jnp.arange(S), (1, S))
+    logits_p, _ = T.prefill(params, cfg, toks, pos)
+    st = T.init_decode_state(cfg, 1, S)
+    logits_d = None
+    for t in range(S):
+        logits_d, st = T.decode_step(params, cfg, st, toks[:, t])
+    np.testing.assert_allclose(
+        np.asarray(logits_p[:, : cfg.vocab_size]),
+        np.asarray(logits_d[:, : cfg.vocab_size]),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+def test_chunked_gla_matches_step_recurrence(rng):
+    """Chunked parallel form == sequential recurrence (oracle)."""
+    B, S, H, dk, dv = 2, 64, 3, 8, 8
+    q = jnp.asarray(rng.normal(0, 1, (B, S, H, dk)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (B, S, H, dk)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, S, H, dv)), jnp.float32)
+    g = jnp.asarray(-np.abs(rng.normal(0.3, 0.3, (B, S, H))), jnp.float32)
+    y_chunk, s_chunk = chunked_gla(q, k, v, g, chunk_size=16)
+    state = jnp.zeros((B, H, dk, dv))
+    ys = []
+    for t in range(S):
+        y_t, state = gla_step(state, q[:, t], k[:, t], v[:, t], g[:, t])
+        ys.append(y_t)
+    y_seq = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_seq), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s_chunk), np.asarray(state), rtol=2e-4, atol=2e-4)
+
+
+def test_chunked_gla_normalized_mode(rng):
+    B, S, H, d = 1, 32, 2, 8
+    q = jnp.asarray(rng.normal(0, 1, (B, S, H, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (B, S, H, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, S, H, d)), jnp.float32)
+    g = jnp.asarray(-np.abs(rng.normal(0.2, 0.2, (B, S, H))), jnp.float32)
+    y_chunk, s_c = chunked_gla(q, k, v, g, chunk_size=8, normalize=True)
+    state = jnp.zeros((B, H, d, d + 1))
+    ys = []
+    for t in range(S):
+        y_t, state = gla_step(state, q[:, t], k[:, t], v[:, t], g[:, t], normalize=True)
+        ys.append(y_t)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(jnp.stack(ys, 1)), rtol=3e-4, atol=3e-4)
+
+
+def test_weighted_loss_reduces_to_plain_ce(rng):
+    """With unit weights the HT-weighted loss equals plain mean CE."""
+    from repro.models.layers import weighted_ce
+
+    logits = jnp.asarray(rng.normal(0, 1, (4, 16, 64)), jnp.float32)
+    targets = jnp.asarray(rng.integers(0, 64, (4, 16)), jnp.int32)
+    loss_w, _ = weighted_ce(logits, targets, jnp.ones(4), None)
+    lse = jax.scipy.special.logsumexp(logits, -1)
+    tgt = jnp.take_along_axis(logits, targets[..., None], -1)[..., 0]
+    assert float(loss_w) == pytest.approx(float(jnp.mean(lse - tgt)), rel=1e-6)
+
+
+def test_param_counts_match_arch_names():
+    """Full configs land near their nameplate parameter counts."""
+    from repro.launch.dryrun import count_params
+
+    expect = {
+        "mistral-large-123b": (110e9, 135e9),
+        "deepseek-67b": (60e9, 72e9),
+        "internlm2-1.8b": (1.5e9, 2.3e9),
+        "qwen1.5-0.5b": (0.3e9, 0.7e9),
+        "qwen2-vl-72b": (65e9, 80e9),
+        "olmoe-1b-7b": (6e9, 8e9),
+        "xlstm-1.3b": (1.0e9, 2.2e9),
+        "zamba2-7b": (6e9, 9e9),
+        "granite-moe-3b-a800m": (2.5e9, 4e9),
+        "seamless-m4t-large-v2": (1.2e9, 2.8e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = count_params(configs.get_config(arch))["total"]
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]"

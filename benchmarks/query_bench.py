@@ -1,0 +1,59 @@
+"""Query-layer latency: 3-aggregate grouped query vs legacy single estimate.
+
+Measures per-window device latency of (a) the legacy `process_window`
+single SUM/MEAN path, (b) a 3-aggregate neighborhood-grouped declarative
+query, and (c) the same query ungrouped — the cost of the API redesign's
+generality on the hot path.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    SHENZHEN_BBOX,
+    AggSpec,
+    EdgeCloudPipeline,
+    PipelineConfig,
+    Query,
+    make_table,
+    windows,
+)
+from repro.data.streams import shenzhen_taxi_stream
+
+from .common import csv_line, time_call
+
+WINDOW = 50_000
+FRACTION = 0.8
+
+
+def run():
+    table = make_table(*SHENZHEN_BBOX, precision=5)
+    pipe = EdgeCloudPipeline(table, PipelineConfig(raw_capacity=WINDOW))
+    w = next(windows.count_windows(shenzhen_taxi_stream(num_chunks=3, seed=0), WINDOW))
+    lat = jnp.asarray(w.lat, jnp.float32)
+    lon = jnp.asarray(w.lon, jnp.float32)
+    val = jnp.asarray(w.value, jnp.float32)
+    occ = jnp.asarray(w.extra["occupancy"], jnp.float32)
+    valid = jnp.asarray(w.valid)
+    key = jax.random.key(0)
+    frac = jnp.float32(FRACTION)
+
+    us = time_call(pipe.process_window, key, lat, lon, val, valid, frac)
+    yield csv_line("query_bench/legacy_single_estimate", us, f"window={WINDOW}")
+
+    aggs3 = (AggSpec("mean", "value"), AggSpec("max", "value"), AggSpec("mean", "occupancy"))
+    win = {"lat": lat, "lon": lon, "valid": valid, "value": val, "occupancy": occ}
+    for name, query in (
+        ("query3_global", Query(aggs=aggs3)),
+        ("query3_grouped_neighborhood", Query(aggs=aggs3, group_by="neighborhood")),
+        ("query3_grouped_raw_mode", Query(aggs=aggs3, group_by="neighborhood", mode="raw")),
+    ):
+        us_q = time_call(pipe.execute, query, key, win, FRACTION)
+        yield csv_line(
+            f"query_bench/{name}", us_q,
+            f"window={WINDOW};aggs={len(aggs3)};vs_legacy={us_q / max(us, 1e-9):.2f}x",
+        )

@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV lines.
   Fig 19     -> cloud_batch
   Fig 20-21  -> edge_vs_cloud (SpatialSSJP baseline implemented)
   kernels    -> kernel_bench
+  query API  -> query_bench (grouped 3-aggregate query vs legacy path)
   §Roofline  -> roofline (reads experiments/dryrun artifacts)
 """
 
@@ -26,6 +27,7 @@ def main() -> None:
         edgesos_latency,
         ingest_throughput,
         kernel_bench,
+        query_bench,
         roofline,
     )
 
@@ -36,6 +38,7 @@ def main() -> None:
         ("cloud_batch", cloud_batch),
         ("edge_vs_cloud", edge_vs_cloud),
         ("kernel_bench", kernel_bench),
+        ("query_bench", query_bench),
         ("roofline", roofline),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None

@@ -10,7 +10,7 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 
 import jax
 
-from repro.core import SHENZHEN_BBOX, SLO, make_table, windows
+from repro.core import AggSpec, Query, SHENZHEN_BBOX, SLO, make_table, windows
 from repro.core.pipeline import EdgeCloudPipeline, PipelineConfig
 from repro.data.streams import shenzhen_taxi_stream
 
@@ -40,6 +40,16 @@ def main():
               f"{100*float(e.relative_error):6.3f} {frac:5.2f} {int(res.n_sampled):6d}")
     print(f"\nfinal sampling fraction chosen by the QoS loop: {float(ctrl.fraction):.2f}")
     print("(answers are reported as mean ± MoE at 95% confidence — paper eq 9)")
+
+    # 5. beyond the single estimate: declarative multi-aggregate queries
+    # (see examples/query_api.py for group-by, ROI, and transmission modes)
+    w = next(windows.count_windows(shenzhen_taxi_stream(num_chunks=2, seed=1), 20_000))
+    q = Query(aggs=(AggSpec("mean", "value"), AggSpec("max", "value"),
+                    AggSpec("mean", "occupancy")))
+    res = pipe.execute(q, jax.random.key(1), w, fraction=float(ctrl.fraction))
+    print("\none window, one sample, three answers:")
+    for k, e in sorted(res.estimates.items()):
+        print(f"  {k:>16} = {float(e.value):8.3f} ±{float(e.moe):.4f}")
 
 
 if __name__ == "__main__":

@@ -26,10 +26,11 @@ import numpy as np
 from repro.core import CHICAGO_BBOX, make_table, windows
 from repro.core.pipeline import EdgeCloudPipeline, PipelineConfig
 from repro.data.streams import chicago_aq_stream
+from repro.sharding.compat import compat_make_mesh
 
 
 def main():
-    mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat_make_mesh((8,), ("data",))
     table = make_table(*CHICAGO_BBOX, precision=6, neighborhood_precision=4)
     print(f"{len(jax.devices())} edge shards; {table.num_strata} strata")
 

@@ -1,38 +1,83 @@
-"""EdgeApproxGeo core: the paper's contribution as composable JAX modules.
+"""EdgeApproxGeo core: the paper's contribution as a composable JAX query engine.
 
 Layers (bottom-up):
   geohash     — Morton-coded geohash encode/decode (pure integer JAX)
   stratify    — stratum tables (regular geohash grid + neighborhood map)
   sampling    — EdgeSOS decentralized stratified sampling (Algorithm 1)
-  estimators  — stratified SUM/MEAN + variance/CI/MoE/RE (eqs 1-10)
+  estimators  — mergeable per-stratum accumulators (StratumStats moments +
+                ColumnStats extrema) and stratified SUM/MEAN + variance/CI/
+                MoE/RE (eqs 1-10)
   routing     — spatial-aware data distribution (topic-per-neighborhood)
   feedback    — QoS loop adapting the sampling fraction to SLOs
-  windows     — tumbling count/time windows
-  pipeline    — Algorithm 2: edge sample -> collective -> cloud estimate
+  windows     — tumbling count/time windows with named value columns
+  query       — the declarative AQP layer: ``Query``/``AggSpec`` specs
+                (sum|mean|count|min|max|var over named columns, optional
+                stratum/neighborhood group-by and bbox/geohash-prefix ROI)
+                lowered by ``query.lower`` into an edge partial-aggregation
+                program plus a cloud consolidation/finalize step
+  pipeline    — the engine executing lowered plans (Algorithm 2): edge
+                sample -> mergeable accumulators -> collective -> cloud
+                finalize, in pre-aggregated or raw transmission mode
+
+Typical use::
+
+    table = make_table(*SHENZHEN_BBOX, precision=6)
+    pipe = EdgeCloudPipeline(table)
+    q = Query(
+        aggs=(AggSpec("mean", "value"), AggSpec("max", "value"),
+              AggSpec("count", "value")),
+        group_by="neighborhood",
+    )
+    result = pipe.execute(q, jax.random.key(0), window, fraction=0.8)
+    result.estimates["mean_value"].value  # (num_neighborhoods,) with MoE
+
+The legacy ``pipe.process_window(...)`` single-estimate API remains as a
+shim over the canonical ``SUM/MEAN(value)`` query.
 """
 
-from . import estimators, feedback, geohash, routing, sampling, stratify, windows
-from .estimators import Estimate, StratumStats, estimate, merge_stats, psum_stats, sample_stats
+from . import estimators, feedback, geohash, query, routing, sampling, stratify, windows
+from .estimators import (
+    ColumnStats,
+    Estimate,
+    StratumStats,
+    column_stats,
+    estimate,
+    merge_column_stats,
+    merge_stats,
+    psum_column_stats,
+    psum_stats,
+    sample_stats,
+)
 from .feedback import SLO, ControllerState
 from .pipeline import EdgeCloudPipeline, PipelineConfig, WindowResult, edge_sample
+from .query import AggEstimate, AggSpec, Plan, Query, QueryResult, lower
 from .routing import RoutePlan, balanced_plan, contiguous_plan
 from .sampling import SampleResult, compact, edgesos
 from .stratify import CHICAGO_BBOX, SHENZHEN_BBOX, StratumTable, make_table, make_table_from_codes
+from .windows import WindowBatch
 
 __all__ = [
+    "AggEstimate",
+    "AggSpec",
     "CHICAGO_BBOX",
+    "ColumnStats",
     "ControllerState",
     "EdgeCloudPipeline",
     "Estimate",
     "PipelineConfig",
+    "Plan",
+    "Query",
+    "QueryResult",
     "RoutePlan",
     "SHENZHEN_BBOX",
     "SLO",
     "SampleResult",
     "StratumStats",
     "StratumTable",
+    "WindowBatch",
     "WindowResult",
     "balanced_plan",
+    "column_stats",
     "compact",
     "contiguous_plan",
     "edge_sample",
@@ -41,10 +86,14 @@ __all__ = [
     "estimators",
     "feedback",
     "geohash",
+    "lower",
     "make_table",
     "make_table_from_codes",
+    "merge_column_stats",
     "merge_stats",
+    "psum_column_stats",
     "psum_stats",
+    "query",
     "routing",
     "sample_stats",
     "sampling",

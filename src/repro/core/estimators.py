@@ -46,6 +46,34 @@ class StratumStats(NamedTuple):
     mean: jnp.ndarray
 
 
+class ColumnStats(NamedTuple):
+    """Generalized mergeable per-stratum accumulator for one value column.
+
+    Extends :class:`StratumStats` (whose five moments cover sum/mean/count/var
+    via the Chan-et-al. parallel merge) with per-stratum sample extrema so
+    ``min``/``max`` aggregates also merge *exactly* across shards.  Empty
+    strata carry ``+inf``/``-inf`` sentinels, the identities of min/max, so
+    every field is a segment-reduction with an exact associative combine:
+    additive (n/total/wsum), mean-shift (m2), or lattice (min/max).
+
+    This is the edge-side payload of the query layer's pre-aggregated
+    transmission mode: one ColumnStats per referenced column per shard.
+    """
+
+    n: jnp.ndarray
+    total: jnp.ndarray
+    wsum: jnp.ndarray
+    m2: jnp.ndarray
+    mean: jnp.ndarray
+    min: jnp.ndarray
+    max: jnp.ndarray
+
+    @property
+    def base(self) -> "StratumStats":
+        """The moment-only view (drop extrema) for the eq 5-10 estimators."""
+        return StratumStats(n=self.n, total=self.total, wsum=self.wsum, m2=self.m2, mean=self.mean)
+
+
 class Estimate(NamedTuple):
     """Global stratified estimate with uncertainty (eqs 5–10)."""
 
@@ -121,6 +149,98 @@ def psum_stats(stats: StratumStats, axis_names) -> StratumStats:
     mean = jnp.where(n > 0, wsum / jnp.maximum(n, 1.0), 0.0)
     m2 = jnp.maximum(raw2 - n * mean * mean, 0.0)
     return StratumStats(n=n, total=total, wsum=wsum, m2=m2, mean=mean)
+
+
+def zero_overflow_stats(stats: StratumStats) -> StratumStats:
+    """Neutralize the overflow slot (additive fields -> 0) so it drops out
+    of estimation; the canonical implementation shared by pipeline shims
+    and the query layer."""
+    keep = jnp.arange(stats.n.shape[0]) < (stats.n.shape[0] - 1)
+
+    def z(x):
+        return jnp.where(keep, x, 0.0)
+
+    return StratumStats(n=z(stats.n), total=z(stats.total), wsum=z(stats.wsum), m2=z(stats.m2), mean=z(stats.mean))
+
+
+def column_stats(
+    values: jnp.ndarray,
+    stratum_idx: jnp.ndarray,
+    mask: jnp.ndarray,
+    num_slots: int,
+    counts: jnp.ndarray | None = None,
+    extrema: bool = True,
+) -> ColumnStats:
+    """Per-stratum generalized accumulator of the sampled tuples of one column.
+
+    Moments come from :func:`sample_stats` (identical ops, so estimates built
+    from ``.base`` match the legacy path bit-for-bit); extrema are masked
+    segment min/max with ``±inf`` identities on empty strata.  Pass
+    ``extrema=False`` when no aggregate reads min/max — the fields are then
+    filled with their identities without running the segment reductions.
+    """
+    base = sample_stats(values, stratum_idx, mask, num_slots, counts=counts)
+    if extrema:
+        v = values.astype(jnp.float32)
+        vmin = jax.ops.segment_min(
+            jnp.where(mask, v, jnp.inf), stratum_idx, num_segments=num_slots
+        )
+        vmax = jax.ops.segment_max(
+            jnp.where(mask, v, -jnp.inf), stratum_idx, num_segments=num_slots
+        )
+    else:
+        vmin = jnp.full((num_slots,), jnp.inf, jnp.float32)
+        vmax = jnp.full((num_slots,), -jnp.inf, jnp.float32)
+    return ColumnStats(
+        n=base.n, total=base.total, wsum=base.wsum, m2=base.m2, mean=base.mean,
+        min=vmin, max=vmax,
+    )
+
+
+def merge_column_stats(a: ColumnStats, b: ColumnStats) -> ColumnStats:
+    """Exact pairwise merge: Chan et al. for moments, lattice for extrema."""
+    base = merge_stats(a.base, b.base)
+    return ColumnStats(
+        n=base.n, total=base.total, wsum=base.wsum, m2=base.m2, mean=base.mean,
+        min=jnp.minimum(a.min, b.min), max=jnp.maximum(a.max, b.max),
+    )
+
+
+def merge_all_columns(stats: Sequence[ColumnStats]) -> ColumnStats:
+    out = stats[0]
+    for s in stats[1:]:
+        out = merge_column_stats(out, s)
+    return out
+
+
+def psum_column_stats(
+    stats: ColumnStats, axis_names, shared: ColumnStats | None = None,
+    extrema: bool = True,
+) -> ColumnStats:
+    """Cross-shard combine: psum of the moment vectors (mean-shift
+    decomposition, see :func:`psum_stats`) plus a pmin/pmax pair for the
+    extrema — O(S) collective bytes per column.
+
+    Columns accumulated from the same sample share identical ``n``/``total``
+    vectors; pass an already-combined column as ``shared`` to reuse them and
+    skip their redundant psums (2 fewer collective vectors per extra column).
+    ``extrema=False`` skips the pmin/pmax collectives for columns no min/max
+    aggregate reads (the identity-filled fields pass through unchanged).
+    """
+    if shared is None:
+        base = psum_stats(stats.base, axis_names)
+        n, total, wsum, m2, mean = base
+    else:
+        n, total = shared.n, shared.total
+        wsum = jax.lax.psum(stats.wsum, axis_names)
+        raw2 = jax.lax.psum(stats.m2 + stats.n * stats.mean * stats.mean, axis_names)
+        mean = jnp.where(n > 0, wsum / jnp.maximum(n, 1.0), 0.0)
+        m2 = jnp.maximum(raw2 - n * mean * mean, 0.0)
+    return ColumnStats(
+        n=n, total=total, wsum=wsum, m2=m2, mean=mean,
+        min=jax.lax.pmin(stats.min, axis_names) if extrema else stats.min,
+        max=jax.lax.pmax(stats.max, axis_names) if extrema else stats.max,
+    )
 
 
 def z_value(confidence: float) -> jnp.ndarray:

@@ -1,44 +1,69 @@
-"""EdgeApproxGeo end-to-end workflow (paper Algorithm 2).
+"""EdgeApproxGeo query engine (paper Algorithm 2 + the declarative layer).
+
+The pipeline executes declarative :class:`~.query.Query` specs over stream
+windows.  A query is lowered (``query.lower``) into the two halves of the
+edge-cloud split:
 
 Edge tier  = the mesh shards along the data axes: each shard independently
-             stratifies + samples its local window (EdgeSOS — no cross-shard
-             communication in the sampling path).
-Cloud tier = the post-collective computation: stratified estimators with
-             error bounds, plus the QoS feedback controller.
+             stratifies + EdgeSOS-samples its local window (no cross-shard
+             communication in the sampling path) and reduces every column
+             the query references to a mergeable per-stratum
+             ``ColumnStats`` accumulator — the *edge partial-aggregation
+             program*.
+Cloud tier = the post-collective computation: consolidate shard partials
+             and finalize each aggregate into an ``AggEstimate`` with error
+             bounds, optionally grouped by stratum / neighborhood — the
+             *consolidation query*.  The QoS feedback controller closes the
+             loop on the reported relative error.
 
 Two transmission modes (paper §3.6.4), chosen per query:
-  * 'preagg' — shards reduce to per-stratum moments, one psum of O(S)
-    floats crosses the interconnect.  This is the default and the paper's
-    bandwidth-saving mode.
-  * 'raw'    — shards compact kept tuples into a padded buffer and
-    all-gather it (the "ship sampled raw tuples" mode).  Collective bytes
-    scale with the kept sample, not with strata.
+  * 'preagg' — shards reduce to per-stratum accumulators; one psum of the
+    moment vectors plus a pmin/pmax of the extrema, O(S · columns) floats,
+    crosses the interconnect.  The default and the paper's bandwidth-saving
+    mode.
+  * 'raw'    — shards compact kept tuples (stratum id + every referenced
+    column) into a padded buffer and all-gather it.  Collective bytes scale
+    with the kept sample, not with strata.
 
-Both modes produce identical estimates for the same sample (tested).
+Both modes produce identical estimates for the same sample, for every
+aggregate kind (tested).
+
+Entry points:
+  * ``execute(query, key, window, fraction)`` — the query engine; accepts a
+    ``WindowBatch`` (multi-column) or a mapping of arrays.
+  * ``process_window(key, lat, lon, value, valid, fraction)`` — legacy
+    single-estimate API, kept as a thin shim over the canonical
+    ``SUM/MEAN(value)`` query; bit-compatible with the pre-query pipeline.
 """
 
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import NamedTuple
-
-import numpy as np
+from typing import Mapping, NamedTuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from . import estimators, feedback, sampling
-from .estimators import Estimate, StratumStats
+from . import query as aqp
+
+from ..sharding.compat import compat_shard_map as _shard_map
+
+from .estimators import ColumnStats, Estimate, StratumStats
+from .query import AggEstimate, AggSpec, Plan, Query, QueryResult
 from .sampling import SampleResult
 from .stratify import StratumTable
+from .windows import WindowBatch
 
 
 @dataclasses.dataclass(frozen=True)
 class PipelineConfig:
-    method: str = "srs"  # srs | bernoulli | neyman
-    mode: str = "preagg"  # preagg | raw
+    """Deployment-level defaults; per-query settings live on ``Query``."""
+
+    method: str = "srs"  # srs | bernoulli | neyman  (legacy-API default)
+    mode: str = "preagg"  # preagg | raw              (legacy-API default)
     confidence: float = 0.95
     raw_capacity: int | None = None  # static per-shard buffer for raw mode
 
@@ -52,14 +77,9 @@ class WindowResult(NamedTuple):
     comm_bytes: jnp.ndarray  # analytic edge->cloud payload size of this mode
 
 
-def _zero_overflow(stats: StratumStats) -> StratumStats:
-    """Remove the out-of-region slot from estimation (kept in aux only)."""
-    keep = jnp.arange(stats.n.shape[0]) < (stats.n.shape[0] - 1)
-
-    def z(x):
-        return jnp.where(keep, x, 0.0)
-
-    return StratumStats(n=z(stats.n), total=z(stats.total), wsum=z(stats.wsum), m2=z(stats.m2), mean=z(stats.mean))
+# remove the out-of-region slot from estimation (kept in aux only);
+# canonical implementation lives with the accumulators in estimators.py
+_zero_overflow = estimators.zero_overflow_stats
 
 
 def edge_sample(
@@ -88,8 +108,90 @@ def edge_sample(
     return sidx, SampleResult(mask=mask, weight=weight, n_k=n_k, counts=counts)
 
 
+def _edge_program(
+    plan: Plan,
+    table: StratumTable,
+    cfg: PipelineConfig,
+    key,
+    lat,
+    lon,
+    cols: Mapping[str, jnp.ndarray],
+    valid,
+    fraction,
+    axes=None,
+):
+    """The lowered edge half of a plan (+ the consolidating collective).
+
+    Returns ``(stats, n_sampled, n_valid, n_overflow, comm_bytes)`` where
+    ``stats`` maps column -> globally merged ColumnStats.  With ``axes``
+    set this runs inside shard_map and consolidation is a collective;
+    otherwise it is the single-edge-node program.
+    """
+    q = plan.query
+    if axes is not None:
+        key = jax.random.fold_in(key, jax.lax.axis_index(axes))
+    ok = valid & aqp.roi_mask(plan, table, lat, lon)
+    sidx, sample = edge_sample(key, table, lat, lon, ok, fraction, q.method)
+    if q.mode == "raw":
+        cap = cfg.raw_capacity or lat.shape[0]
+        packed = sampling.compact(
+            sample.mask, cap, sidx, *[cols[c] for c in plan.columns]
+        )
+        counts = sample.counts
+        if axes is not None:
+            packed = tuple(jax.lax.all_gather(p, axes, tiled=True) for p in packed)
+            counts = jax.lax.psum(counts, axes)
+        v_ok, v_sidx = packed[0], packed[1]
+        stats = {
+            c: estimators.column_stats(
+                packed[2 + i], v_sidx, v_ok, table.num_slots, counts=counts,
+                extrema=c in plan.extrema_columns,
+            )
+            for i, c in enumerate(plan.columns)
+        }
+        comm = jnp.int32(aqp.raw_bytes(plan, cap))
+    else:
+        stats = {
+            c: estimators.column_stats(
+                cols[c], sidx, sample.mask, table.num_slots, counts=sample.counts,
+                extrema=c in plan.extrema_columns,
+            )
+            for c in plan.columns
+        }
+        if axes is not None:
+            merged: dict = {}
+            shared = None
+            for c in plan.columns:
+                merged[c] = estimators.psum_column_stats(
+                    stats[c], axes, shared=shared, extrema=c in plan.extrema_columns
+                )
+                shared = shared or merged[c]  # n/total identical across columns
+            stats = merged
+        comm = jnp.int32(aqp.preagg_bytes(plan, table.num_slots))
+    n_sampled = jnp.sum(sample.mask.astype(jnp.int32))
+    n_valid = jnp.sum(ok.astype(jnp.int32))
+    n_overflow = sample.counts[-1] + jnp.sum((valid & ~ok).astype(jnp.int32))
+    if axes is not None:
+        n_sampled = jax.lax.psum(n_sampled, axes)
+        n_valid = jax.lax.psum(n_valid, axes)
+        n_overflow = jax.lax.psum(n_overflow, axes)
+    return stats, n_sampled, n_valid, n_overflow, comm
+
+
+def _result_template(plan: Plan) -> QueryResult:
+    """Structure-only QueryResult (for shard_map out_specs trees)."""
+    return QueryResult(
+        estimates={a.key: AggEstimate(*(0,) * 7) for a in plan.query.aggs},
+        stats={c: ColumnStats(*(0,) * 7) for c in plan.columns},
+        n_sampled=0,
+        n_valid=0,
+        n_overflow=0,
+        comm_bytes=0,
+    )
+
+
 class EdgeCloudPipeline:
-    """Single-program pipeline; optionally distributed over mesh data axes."""
+    """Single-program query engine; optionally distributed over mesh axes."""
 
     def __init__(
         self,
@@ -102,83 +204,143 @@ class EdgeCloudPipeline:
         self.config = config
         self.mesh = mesh
         self.axis_names = axis_names
-        if mesh is not None:
-            self._sharded = self._build_sharded()
+        self._plans: dict[Query, Plan] = {}
+        self._execs: dict[tuple[Query, bool], callable] = {}
 
-    # -- single-shard ("one edge node") path --------------------------------
+    # -- declarative query API ----------------------------------------------
 
-    @partial(jax.jit, static_argnums=(0,))
-    def process_window(self, key, lat, lon, value, valid, fraction) -> WindowResult:
+    def plan(self, query: Query) -> Plan:
+        """Lower (and cache) a query against this pipeline's stratum table."""
+        p = self._plans.get(query)
+        if p is None:
+            p = aqp.lower(query, self.table)
+            self._plans[query] = p
+        return p
+
+    def _query_fn(self, query: Query, sharded: bool):
+        fn = self._execs.get((query, sharded))
+        if fn is not None:
+            return fn
+        plan = self.plan(query)
         table, cfg = self.table, self.config
-        sidx, sample = edge_sample(key, table, lat, lon, valid, fraction, cfg.method)
-        stats = estimators.sample_stats(
-            value, sidx, sample.mask, table.num_slots, counts=sample.counts
-        )
-        est_stats = _zero_overflow(stats)
-        est = estimators.estimate(est_stats, cfg.confidence)
-        comm = jnp.int32(4 * 4 * table.num_slots)  # preagg payload (bytes)
-        return WindowResult(
-            estimate=est,
-            stats=stats,
-            n_sampled=jnp.sum(sample.mask.astype(jnp.int32)),
-            n_valid=jnp.sum(valid.astype(jnp.int32)),
-            n_overflow=sample.counts[-1],
-            comm_bytes=comm,
-        )
 
-    # -- distributed path ----------------------------------------------------
-
-    def _build_sharded(self):
-        table, cfg, axes = self.table, self.config, self.axis_names
-        spec = P(axes)
-
-        def shard_fn(key, lat, lon, value, valid, fraction):
-            # per-shard independent PRNG: fold in the shard's linear index
-            idx = jax.lax.axis_index(axes)
-            key = jax.random.fold_in(key, idx)
-            sidx, sample = edge_sample(key, table, lat, lon, valid, fraction, cfg.method)
-            if cfg.mode == "preagg":
-                local = estimators.sample_stats(
-                    value, sidx, sample.mask, table.num_slots, counts=sample.counts
-                )
-                stats = estimators.psum_stats(local, axes)
-                comm = jnp.int32(4 * 4 * table.num_slots)
-            else:
-                cap = cfg.raw_capacity or lat.shape[0]
-                v_ok, v_sidx, v_val = sampling.compact(sample.mask, cap, sidx, value)
-                g_ok = jax.lax.all_gather(v_ok, axes, tiled=True)
-                g_sidx = jax.lax.all_gather(v_sidx, axes, tiled=True)
-                g_val = jax.lax.all_gather(v_val, axes, tiled=True)
-                counts = jax.lax.psum(sample.counts, axes)
-                stats = estimators.sample_stats(
-                    g_val, g_sidx, g_ok, table.num_slots, counts=counts
-                )
-                comm = jnp.int32(cap * (4 + 4 + 1))
-            est = estimators.estimate(_zero_overflow(stats), cfg.confidence)
-            return WindowResult(
-                estimate=est,
+        def run(key, lat, lon, cols, valid, fraction, axes=None):
+            stats, n_sampled, n_valid, n_overflow, comm = _edge_program(
+                plan, table, cfg, key, lat, lon, cols, valid, fraction, axes=axes
+            )
+            return QueryResult(
+                estimates=aqp.finalize(plan, table, stats),
                 stats=stats,
-                n_sampled=jax.lax.psum(jnp.sum(sample.mask.astype(jnp.int32)), axes),
-                n_valid=jax.lax.psum(jnp.sum(valid.astype(jnp.int32)), axes),
-                n_overflow=jax.lax.psum(sample.counts[-1], axes),
+                n_sampled=n_sampled,
+                n_valid=n_valid,
+                n_overflow=n_overflow,
                 comm_bytes=comm,
             )
 
-        mapped = jax.shard_map(
-            shard_fn,
-            mesh=self.mesh,
-            in_specs=(P(), spec, spec, spec, spec, P()),
-            out_specs=jax.tree.map(lambda _: P(), WindowResult(
-                estimate=Estimate(*(0,) * 10), stats=StratumStats(*(0,) * 5),
-                n_sampled=0, n_valid=0, n_overflow=0, comm_bytes=0)),
-            check_vma=False,
-        )
-        return jax.jit(mapped)
+        if not sharded:
+            fn = jax.jit(run)
+        else:
+            axes = self.axis_names
+            spec = P(axes)
+            mapped = _shard_map(
+                partial(run, axes=axes),
+                mesh=self.mesh,
+                in_specs=(P(), spec, spec, {c: spec for c in plan.columns}, spec, P()),
+                out_specs=jax.tree.map(lambda _: P(), _result_template(plan)),
+                check_vma=False,
+            )
+            fn = jax.jit(mapped)
+        self._execs[(query, sharded)] = fn
+        return fn
 
-    def process_window_sharded(self, key, lat, lon, value, valid, fraction) -> WindowResult:
+    def _window_arrays(self, window, plan: Plan):
+        """Host-side: split a WindowBatch / mapping into device inputs."""
+        if isinstance(window, WindowBatch):
+            cols = window.columns
+            lat, lon, valid = window.lat, window.lon, window.valid
+        else:
+            cols = {k: v for k, v in window.items() if k not in ("lat", "lon", "valid")}
+            lat, lon = window["lat"], window["lon"]
+            valid = window.get("valid")
+        lat = jnp.asarray(lat, jnp.float32)
+        lon = jnp.asarray(lon, jnp.float32)
+        valid = jnp.ones(lat.shape, bool) if valid is None else jnp.asarray(valid, bool)
+        missing = [c for c in plan.columns if c not in cols]
+        if missing:
+            raise KeyError(f"window has no column(s) {missing}; available: {sorted(cols)}")
+        cols = {c: jnp.asarray(cols[c], jnp.float32) for c in plan.columns}
+        return lat, lon, cols, valid
+
+    def execute(self, query: Query, key, window, fraction=1.0) -> QueryResult:
+        """Evaluate a declarative query over one window on one edge node.
+
+        ``window`` is a :class:`WindowBatch` or a mapping with ``lat``,
+        ``lon``, optional ``valid``, and one array per referenced column.
+        """
+        plan = self.plan(query)
+        lat, lon, cols, valid = self._window_arrays(window, plan)
+        fn = self._query_fn(query, sharded=False)
+        return fn(key, lat, lon, cols, valid, jnp.float32(fraction))
+
+    def execute_sharded(self, query: Query, key, window, fraction=1.0) -> QueryResult:
+        """Distributed execute: shards = edge nodes, collective = uplink."""
         if self.mesh is None:
             raise ValueError("pipeline constructed without a mesh")
-        return self._sharded(key, lat, lon, value, valid, jnp.float32(fraction))
+        plan = self.plan(query)
+        lat, lon, cols, valid = self._window_arrays(window, plan)
+        fn = self._query_fn(query, sharded=True)
+        return fn(key, lat, lon, cols, valid, jnp.float32(fraction))
+
+    # -- legacy single-estimate API (shim over the canonical query) ---------
+
+    def _canonical_query(self, mode: str = "preagg") -> Query:
+        """The fixed query the pre-redesign API answered: SUM/MEAN(value)."""
+        return Query(
+            aggs=(AggSpec("sum", "value"), AggSpec("mean", "value")),
+            confidence=self.config.confidence,
+            method=self.config.method,
+            mode=mode,
+        )
+
+    @partial(jax.jit, static_argnums=(0,))
+    def process_window(self, key, lat, lon, value, valid, fraction) -> WindowResult:
+        plan = self.plan(self._canonical_query())
+        stats, n_sampled, n_valid, n_overflow, comm = _edge_program(
+            plan, self.table, self.config, key, lat, lon, {"value": value}, valid, fraction
+        )
+        base = stats["value"].base
+        est = estimators.estimate(_zero_overflow(base), self.config.confidence)
+        # a moment-only single-column plan ships exactly the legacy payload
+        return WindowResult(
+            estimate=est,
+            stats=base,
+            n_sampled=n_sampled,
+            n_valid=n_valid,
+            n_overflow=n_overflow,
+            comm_bytes=comm,
+        )
+
+    def process_window_sharded(self, key, lat, lon, value, valid, fraction) -> WindowResult:
+        """Legacy distributed API: shim over the canonical query's sharded
+        plan (one edge program for both paths), honoring ``config.mode``."""
+        if self.mesh is None:
+            raise ValueError("pipeline constructed without a mesh")
+        fn = self._query_fn(self._canonical_query(mode=self.config.mode), sharded=True)
+        res = fn(
+            key, lat, lon, {"value": value}, jnp.asarray(valid), jnp.float32(fraction)
+        )
+        base = res.stats["value"].base
+        est = estimators.estimate(_zero_overflow(base), self.config.confidence)
+        # moment-only single-column plans ship the legacy payloads in both
+        # modes (preagg 4 vectors, raw 9 bytes/slot), so comm passes through
+        return WindowResult(
+            estimate=est,
+            stats=base,
+            n_sampled=res.n_sampled,
+            n_valid=res.n_valid,
+            n_overflow=res.n_overflow,
+            comm_bytes=res.comm_bytes,
+        )
 
     # -- continuous query loop (Algorithm 2) ---------------------------------
 
@@ -189,23 +351,51 @@ class EdgeCloudPipeline:
         initial_fraction: float = 0.8,
         key=None,
         sharded: bool = False,
+        query: Query | None = None,
     ):
-        """Process a stream of WindowBatch under the QoS feedback loop."""
+        """Process a stream of WindowBatch under the QoS feedback loop.
+
+        With ``query`` set, each window is answered by ``execute`` and the
+        controller tracks the relative error of the query's first
+        *error-bounded* (sum/mean) aggregate — point-estimate kinds report
+        RE 0 and would collapse the fraction.  Grouped queries are driven
+        by the worst group with a finite RE (empty groups report inf).  A
+        query with no sum/mean aggregate keeps the fraction fixed.
+        """
         slo = slo or feedback.SLO()
         key = key if key is not None else jax.random.key(0)
         state = feedback.init_state(initial_fraction)
         history = []
+        qos_spec = None
+        if query is not None:
+            qos_spec = next((a for a in query.aggs if a.kind in ("sum", "mean")), None)
         for i, w in enumerate(windows):
             key, sub = jax.random.split(key)
-            fn = self.process_window_sharded if sharded else self.process_window
-            res = fn(
-                sub,
-                jnp.asarray(w.lat, jnp.float32),
-                jnp.asarray(w.lon, jnp.float32),
-                jnp.asarray(w.value, jnp.float32),
-                jnp.asarray(w.valid),
-                state.fraction,
-            )
-            state = feedback.update(state, res.estimate.relative_error, res.n_valid, slo)
+            if query is not None:
+                fn = self.execute_sharded if sharded else self.execute
+                res = fn(query, sub, w, state.fraction)
+                if qos_spec is None:
+                    history.append((res, float(state.fraction)))
+                    continue
+                rel = res.estimates[qos_spec.key].relative_error
+                if rel.ndim:  # worst group with a finite RE drives QoS
+                    finite = jnp.isfinite(rel)
+                    # no finite group at all -> inf, which the controller
+                    # clamps to the target (holds the fraction steady)
+                    rel = jnp.where(
+                        jnp.any(finite), jnp.max(jnp.where(finite, rel, 0.0)), jnp.inf
+                    )
+            else:
+                fn = self.process_window_sharded if sharded else self.process_window
+                res = fn(
+                    sub,
+                    jnp.asarray(w.lat, jnp.float32),
+                    jnp.asarray(w.lon, jnp.float32),
+                    jnp.asarray(w.value, jnp.float32),
+                    jnp.asarray(w.valid),
+                    state.fraction,
+                )
+                rel = res.estimate.relative_error
+            state = feedback.update(state, rel, res.n_valid, slo)
             history.append((res, float(state.fraction)))
         return history, state

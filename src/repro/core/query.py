@@ -1,0 +1,403 @@
+"""Declarative AQP query layer: specs lowered to edge/cloud plans.
+
+This is the repo's analogue of EdgeLake's distributed-query split (remote
+query -> per-operator partial aggregates -> local consolidation query) and
+of StreamApprox-style approximate stream analytics: a :class:`Query` is a
+declarative bundle of aggregates over named value columns, and
+:func:`lower` turns it into a :class:`Plan` with two halves:
+
+  * an **edge partial-aggregation program** — stratify + EdgeSOS sample the
+    local window, then reduce each referenced column to a mergeable
+    :class:`~.estimators.ColumnStats` accumulator (per stratum).  Every
+    accumulator field merges exactly across shards: additive moments via the
+    Chan-et-al. decomposition, extrema via min/max lattices.
+  * a **cloud consolidation/finalize step** — combine shard partials (one
+    ``psum``/``pmin``/``pmax`` in ``preagg`` mode, or re-aggregation of
+    all-gathered raw tuples in ``raw`` mode) and evaluate each
+    :class:`AggSpec` into an :class:`AggEstimate`, optionally grouped by
+    stratum or neighborhood.
+
+Both transmission modes produce identical estimates for the same sample,
+per aggregate kind (tested in ``tests/test_query.py``).
+
+Supported aggregate kinds and their error semantics:
+
+  sum / mean   stratified estimators with eq 5-10 variance / CI / MoE;
+  count        in-region population count — exact per window (population
+               counts are observed, not sampled), MoE 0;
+  var          plug-in population variance (within + between stratum
+               decomposition over the sample), reported as a point estimate;
+  min / max    sample extrema (point estimates; a sample extreme bounds the
+               population extreme from inside).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from . import estimators, geohash
+from .estimators import ColumnStats, z_value
+from .stratify import StratumTable
+
+KINDS = ("sum", "mean", "count", "min", "max", "var")
+GROUP_KEYS = (None, "stratum", "neighborhood")
+
+# Accumulator fields of ColumnStats each aggregate kind needs on the edge.
+# sum/mean/var carry m2 because their finalize evaluates the stratified
+# variance (eq 6) for error bounds; count needs only the population counts
+# (plus n for coverage accounting); extrema ride on the min/max lattices.
+ACCUMULATOR_FIELDS: dict[str, tuple[str, ...]] = {
+    "sum": ("n", "total", "wsum", "m2", "mean"),
+    "mean": ("n", "total", "wsum", "m2", "mean"),
+    "var": ("n", "total", "wsum", "m2", "mean"),
+    "count": ("n", "total"),
+    "min": ("n", "min"),
+    "max": ("n", "max"),
+}
+
+
+class AggSpec(NamedTuple):
+    """One aggregate: ``kind`` over a named value column.
+
+    ``name`` keys the result dict; defaults to ``"<kind>_<column>"``.
+    """
+
+    kind: str
+    column: str = "value"
+    name: str | None = None
+
+    @property
+    def key(self) -> str:
+        return self.name or f"{self.kind}_{self.column}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Query:
+    """Declarative AQP query over one stream window.
+
+    Attributes:
+      aggs: the aggregates to evaluate (tuple of :class:`AggSpec`).
+      group_by: ``None`` (one global answer), ``"stratum"`` or
+        ``"neighborhood"`` (one answer per group, vector-shaped results).
+      roi: optional region-of-interest filter — a bbox
+        ``((lat_lo, lat_hi), (lon_lo, lon_hi))`` or a geohash prefix string;
+        tuples outside the ROI are excluded from every aggregate (they land
+        in the overflow slot and are reported as ``n_overflow``).
+      confidence: CI level for the stratified estimators.
+      method: EdgeSOS sampling method (``srs | bernoulli | neyman``).
+      mode: edge->cloud transmission mode (``preagg | raw``).
+
+    Frozen and hashable, so a Query can key a compiled-executable cache.
+    """
+
+    aggs: tuple[AggSpec, ...]
+    group_by: str | None = None
+    roi: tuple | str | None = None
+    confidence: float = 0.95
+    method: str = "srs"
+    mode: str = "preagg"
+
+    def __post_init__(self):
+        aggs = tuple(
+            a if isinstance(a, AggSpec) else AggSpec(*a) for a in self.aggs
+        )
+        if not aggs:
+            raise ValueError("Query needs at least one AggSpec")
+        for a in aggs:
+            if a.kind not in KINDS:
+                raise ValueError(f"unknown aggregate kind {a.kind!r}; choose from {KINDS}")
+        keys = [a.key for a in aggs]
+        if len(set(keys)) != len(keys):
+            raise ValueError(f"duplicate aggregate keys: {keys}")
+        object.__setattr__(self, "aggs", aggs)
+        if self.group_by not in GROUP_KEYS:
+            raise ValueError(f"group_by must be one of {GROUP_KEYS}")
+        if self.mode not in ("preagg", "raw"):
+            raise ValueError(f"unknown mode {self.mode!r}")
+        if isinstance(self.roi, (list, tuple)):
+            try:
+                (a, b), (c, d) = self.roi
+            except (TypeError, ValueError) as e:
+                raise ValueError(
+                    "roi bbox must be ((lat_lo, lat_hi), (lon_lo, lon_hi)); "
+                    f"got {self.roi!r}"
+                ) from e
+            object.__setattr__(
+                self, "roi", ((float(a), float(b)), (float(c), float(d)))
+            )
+        elif self.roi is not None and not isinstance(self.roi, str):
+            raise ValueError(
+                "roi must be None, a geohash-prefix string, or a bbox "
+                f"((lat_lo, lat_hi), (lon_lo, lon_hi)); got {type(self.roi).__name__}"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """A lowered Query: what the edge computes and how the cloud finalizes.
+
+    Attributes:
+      query: the source spec.
+      columns: distinct value columns needing a ColumnStats accumulator.
+      accumulators: per aggregate key, the ColumnStats fields its finalize
+        reads — the "expected accumulator set" of the lowering.
+      extrema_columns: the subset of ``columns`` some min/max aggregate
+        reads; the others skip extrema reductions/collectives entirely.
+      num_groups: static result width (1 when ``group_by`` is None).
+      roi_prefix_code: pre-parsed geohash code when ``roi`` is a prefix.
+    """
+
+    query: Query
+    columns: tuple[str, ...]
+    accumulators: tuple[tuple[str, tuple[str, ...]], ...]
+    extrema_columns: tuple[str, ...] = ()
+    num_groups: int = 1
+    roi_prefix_code: int | None = None
+
+    @property
+    def accumulator_map(self) -> dict[str, tuple[str, ...]]:
+        return dict(self.accumulators)
+
+
+def lower(query: Query, table: StratumTable) -> Plan:
+    """Lower a declarative Query against a stratum table into a Plan."""
+    columns = tuple(dict.fromkeys(a.column for a in query.aggs))
+    accs = tuple((a.key, ACCUMULATOR_FIELDS[a.kind]) for a in query.aggs)
+    extrema = tuple(
+        c for c in columns
+        if any(a.column == c and a.kind in ("min", "max") for a in query.aggs)
+    )
+    if query.group_by == "stratum":
+        num_groups = table.num_strata
+    elif query.group_by == "neighborhood":
+        num_groups = table.num_neighborhoods
+    else:
+        num_groups = 1
+    prefix_code = None
+    if isinstance(query.roi, str):
+        if len(query.roi) > table.precision:
+            raise ValueError(
+                f"roi prefix {query.roi!r} is finer than the stratum grid "
+                f"(precision {table.precision})"
+            )
+        prefix_code = int(geohash.from_strings([query.roi])[0])
+    return Plan(
+        query=query,
+        columns=columns,
+        accumulators=accs,
+        extrema_columns=extrema,
+        num_groups=num_groups,
+        roi_prefix_code=prefix_code,
+    )
+
+
+def roi_mask(plan: Plan, table: StratumTable, lat: jnp.ndarray, lon: jnp.ndarray) -> jnp.ndarray:
+    """Boolean in-region mask for the plan's ROI (all-True when unset)."""
+    roi = plan.query.roi
+    if roi is None:
+        return jnp.ones(lat.shape, bool)
+    if isinstance(roi, str):
+        code = geohash.encode(lat, lon, table.precision)
+        par = geohash.parent(code, table.precision, len(roi))
+        return par == jnp.asarray(plan.roi_prefix_code, par.dtype)
+    (lat_lo, lat_hi), (lon_lo, lon_hi) = roi
+    return (lat >= lat_lo) & (lat <= lat_hi) & (lon >= lon_lo) & (lon <= lon_hi)
+
+
+class AggEstimate(NamedTuple):
+    """One finalized aggregate; scalars, or (num_groups,) when grouped.
+
+    ``moe``/``ci_low``/``ci_high``/``relative_error`` are the eq 9-10 error
+    bounds for sum/mean; zero-width for the exact/point-estimate kinds.
+    ``n`` is the realized sample size and ``population`` the in-region
+    window population backing the estimate.
+    """
+
+    value: jnp.ndarray
+    moe: jnp.ndarray
+    ci_low: jnp.ndarray
+    ci_high: jnp.ndarray
+    relative_error: jnp.ndarray
+    n: jnp.ndarray
+    population: jnp.ndarray
+
+
+class QueryResult(NamedTuple):
+    """pipeline.execute output: per-aggregate estimates + diagnostics."""
+
+    estimates: dict  # agg key -> AggEstimate
+    stats: dict  # column -> merged ColumnStats (S+1 slots, overflow kept)
+    n_sampled: jnp.ndarray
+    n_valid: jnp.ndarray
+    n_overflow: jnp.ndarray
+    comm_bytes: jnp.ndarray  # analytic edge->cloud payload of the plan's mode
+
+
+def zero_overflow_column(stats: ColumnStats) -> ColumnStats:
+    """Neutralize the overflow slot: additive fields -> 0 (shared
+    :func:`estimators.zero_overflow_stats` rule), extrema -> ±inf."""
+    base = estimators.zero_overflow_stats(stats.base)
+    keep = jnp.arange(stats.n.shape[0]) < (stats.n.shape[0] - 1)
+    return ColumnStats(
+        n=base.n, total=base.total, wsum=base.wsum, m2=base.m2, mean=base.mean,
+        min=jnp.where(keep, stats.min, jnp.inf),
+        max=jnp.where(keep, stats.max, -jnp.inf),
+    )
+
+
+def _group_index(plan: Plan, table: StratumTable) -> jnp.ndarray:
+    """stratum slot -> group id; overflow maps to an extra discarded group."""
+    s = table.num_strata
+    if plan.query.group_by == "stratum":
+        grp = jnp.arange(s, dtype=jnp.int32)
+    else:
+        grp = table.neighborhood[:s]
+    return jnp.concatenate([grp, jnp.asarray([plan.num_groups], jnp.int32)])
+
+
+def _gsum(x: jnp.ndarray, grp: jnp.ndarray, num: int) -> jnp.ndarray:
+    return jax.ops.segment_sum(x, grp, num_segments=num + 1)[:num]
+
+
+def finalize(plan: Plan, table: StratumTable, stats: dict[str, ColumnStats]) -> dict:
+    """Cloud-side consolidation: merged accumulators -> AggEstimates.
+
+    This is the "local consolidation query" half of the split: it sees only
+    per-stratum accumulators (never raw tuples) and evaluates every AggSpec,
+    grouping strata into the plan's result groups.
+
+    For ``group_by=None`` the stratified sum/mean path evaluates
+    :func:`estimators.estimate` on the moment view — the exact legacy
+    computation, which keeps the ``process_window`` shim bit-compatible.
+    """
+    q = plan.query
+    grouped = q.group_by is not None
+    num = plan.num_groups
+    z = z_value(q.confidence)
+    grp = _group_index(plan, table) if grouped else None
+
+    out: dict[str, AggEstimate] = {}
+    full_est: dict[str, estimators.Estimate] = {}
+    for spec in q.aggs:
+        cs = zero_overflow_column(stats[spec.column])
+        n, N = cs.n, cs.total
+        active = (n > 0) & (N > 0)
+        if grouped:
+            n_g = _gsum(n, grp, num)
+            pop_g = _gsum(N, grp, num)
+            covered_g = jnp.maximum(_gsum(jnp.where(active, N, 0.0), grp, num), 0.0)
+        else:
+            n_g = jnp.sum(n)
+            pop_g = jnp.sum(N)
+            covered_g = jnp.sum(jnp.where(active, N, 0.0))
+
+        if spec.kind == "count":
+            val = pop_g
+            zero = jnp.zeros_like(val)
+            out[spec.key] = AggEstimate(
+                value=val, moe=zero, ci_low=val, ci_high=val,
+                relative_error=zero, n=n_g, population=pop_g,
+            )
+            continue
+
+        if spec.kind in ("min", "max"):
+            field = cs.min if spec.kind == "min" else cs.max
+            if grouped:
+                seg = jax.ops.segment_min if spec.kind == "min" else jax.ops.segment_max
+                val = seg(field, grp, num_segments=num + 1)[:num]
+            else:
+                val = jnp.min(field) if spec.kind == "min" else jnp.max(field)
+            zero = jnp.zeros_like(val)
+            out[spec.key] = AggEstimate(
+                value=val, moe=zero, ci_low=val, ci_high=val,
+                relative_error=zero, n=n_g, population=pop_g,
+            )
+            continue
+
+        if not grouped and spec.kind in ("sum", "mean"):
+            # exact legacy path (bit-compatible with the pre-query pipeline)
+            est = full_est.get(spec.column)
+            if est is None:
+                est = estimators.estimate(cs.base, q.confidence)
+                full_est[spec.column] = est
+            if spec.kind == "sum":
+                moe_s = z * jnp.sqrt(jnp.maximum(est.var_sum, 0.0))
+                rel_s = jnp.where(
+                    jnp.abs(est.sum) > 0, moe_s / jnp.maximum(jnp.abs(est.sum), 1e-30), jnp.inf
+                )
+                out[spec.key] = AggEstimate(
+                    value=est.sum, moe=moe_s, ci_low=est.sum - moe_s,
+                    ci_high=est.sum + moe_s, relative_error=rel_s,
+                    n=est.n_total, population=est.population,
+                )
+            else:
+                out[spec.key] = AggEstimate(
+                    value=est.mean, moe=est.moe, ci_low=est.ci_low,
+                    ci_high=est.ci_high, relative_error=est.relative_error,
+                    n=est.n_total, population=est.population,
+                )
+            continue
+
+        # grouped sum/mean/var and global var: per-stratum eq 4-7 terms,
+        # segment-summed into groups (stratification is preserved inside
+        # each group — a group is just a sub-population of strata).
+        s2_k = jnp.where(n > 1, cs.m2 / jnp.maximum(n - 1.0, 1.0), 0.0)
+        fpc = jnp.where(N > 0, 1.0 - n / jnp.maximum(N, 1.0), 0.0)
+        t_k = jnp.where(active, N * cs.mean, 0.0)  # per-stratum sum term
+        v_k = jnp.where(active, N * N * fpc * s2_k / jnp.maximum(n, 1.0), 0.0)
+        if grouped:
+            sum_g = _gsum(t_k, grp, num)
+            var_sum_g = _gsum(v_k, grp, num)
+        else:
+            sum_g = jnp.sum(t_k)
+            var_sum_g = jnp.sum(v_k)
+        mean_g = sum_g / jnp.maximum(covered_g, 1.0)
+
+        if spec.kind == "var":
+            # plug-in population variance: E[y^2] - mean^2 with s2_k as the
+            # within-stratum second moment around the stratum mean.
+            ey2_k = jnp.where(active, N * (s2_k + cs.mean * cs.mean), 0.0)
+            ey2_g = _gsum(ey2_k, grp, num) if grouped else jnp.sum(ey2_k)
+            val = jnp.maximum(ey2_g / jnp.maximum(covered_g, 1.0) - mean_g * mean_g, 0.0)
+            zero = jnp.zeros_like(val)
+            out[spec.key] = AggEstimate(
+                value=val, moe=zero, ci_low=val, ci_high=val,
+                relative_error=zero, n=n_g, population=pop_g,
+            )
+            continue
+
+        if spec.kind == "sum":
+            val = sum_g
+            moe_g = z * jnp.sqrt(jnp.maximum(var_sum_g, 0.0))
+        else:  # mean
+            val = mean_g
+            var_mean_g = var_sum_g / jnp.maximum(covered_g, 1.0) ** 2
+            moe_g = z * jnp.sqrt(jnp.maximum(var_mean_g, 0.0))
+        rel = jnp.where(jnp.abs(val) > 0, moe_g / jnp.maximum(jnp.abs(val), 1e-30), jnp.inf)
+        out[spec.key] = AggEstimate(
+            value=val, moe=moe_g, ci_low=val - moe_g, ci_high=val + moe_g,
+            relative_error=rel, n=n_g, population=pop_g,
+        )
+    return out
+
+
+def preagg_bytes(plan: Plan, num_slots: int) -> int:
+    """Analytic per-shard payload of preagg mode: n/total are shared across
+    columns (psummed once); wsum/raw2 cross per column (mean and m2 are
+    derived cloud-side), min/max only for columns an extrema aggregate
+    reads.  4-byte floats.  A single moment-only column gives the legacy
+    4-vector payload."""
+    fields = 2 + 2 * len(plan.columns) + 2 * len(plan.extrema_columns)
+    return 4 * num_slots * fields
+
+
+def raw_bytes(plan: Plan, capacity: int) -> int:
+    """Analytic per-shard payload of raw mode: stratum id (4B) + validity
+    (1B) + one f32 per referenced column, per buffer slot."""
+    return capacity * (5 + 4 * len(plan.columns))

@@ -6,6 +6,12 @@ constant under bursty traffic.  Both triggers are provided; windows are
 host-side iterators yielding fixed-shape arrays (count windows) or padded
 arrays with a validity mask (time windows), so every device step is a single
 compiled program.
+
+Windows carry *multiple named value columns* for the query layer: stream
+chunks may include any number of extra numeric keys beyond the canonical
+``sensor_id/timestamp/lat/lon/value`` (e.g. mobility speed + occupancy, air
+quality PM2.5 + temperature).  Extra keys ride in ``WindowBatch.extra`` and
+are addressable from ``Query`` aggregates via ``WindowBatch.columns``.
 """
 
 from __future__ import annotations
@@ -14,6 +20,8 @@ import dataclasses
 from typing import Iterator
 
 import numpy as np
+
+CANONICAL_KEYS = ("sensor_id", "timestamp", "lat", "lon", "value")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -26,6 +34,7 @@ class WindowBatch:
     lon: np.ndarray
     value: np.ndarray
     valid: np.ndarray
+    extra: dict = dataclasses.field(default_factory=dict)
 
     @property
     def size(self) -> int:
@@ -35,6 +44,11 @@ class WindowBatch:
     def capacity(self) -> int:
         return int(self.valid.shape[0])
 
+    @property
+    def columns(self) -> dict:
+        """All named value columns: the primary ``value`` plus extras."""
+        return {"value": self.value, **self.extra}
+
 
 def _pad(arr: np.ndarray, capacity: int) -> np.ndarray:
     out = np.zeros((capacity,) + arr.shape[1:], dtype=arr.dtype)
@@ -42,14 +56,46 @@ def _pad(arr: np.ndarray, capacity: int) -> np.ndarray:
     return out
 
 
+def _make_batch(cat: dict, valid: np.ndarray, pad_to: int | None = None) -> WindowBatch:
+    def col(k):
+        a = cat[k]
+        return _pad(a, pad_to) if pad_to is not None else a
+
+    extra = {k: col(k) for k in cat if k not in CANONICAL_KEYS}
+    return WindowBatch(
+        sensor_id=col("sensor_id"),
+        timestamp=col("timestamp"),
+        lat=col("lat"),
+        lon=col("lon"),
+        value=col("value"),
+        valid=valid,
+        extra=extra,
+    )
+
+
+def _check_keys(buf: dict, chunk: dict) -> None:
+    """Every chunk must carry the same column set as the first one; a drift
+    would otherwise silently drop (new key) or crash on (missing key) data."""
+    if buf.keys() != chunk.keys():
+        raise ValueError(
+            f"stream chunk keys {sorted(chunk)} differ from the first "
+            f"chunk's {sorted(buf)}; columns must be consistent across chunks"
+        )
+
+
 def count_windows(stream: Iterator[dict], window_size: int) -> Iterator[WindowBatch]:
     """Count-triggered tumbling windows: exactly ``window_size`` tuples each.
 
-    ``stream`` yields dict chunks with keys sensor_id/timestamp/lat/lon/value.
+    ``stream`` yields dict chunks with keys sensor_id/timestamp/lat/lon/value
+    plus any number of extra value columns (carried into ``extra``); the key
+    set must be identical across chunks.
     """
-    buf: dict[str, list[np.ndarray]] = {k: [] for k in ("sensor_id", "timestamp", "lat", "lon", "value")}
+    buf: dict[str, list[np.ndarray]] | None = None
     have = 0
     for chunk in stream:
+        if buf is None:
+            buf = {k: [] for k in chunk}
+        _check_keys(buf, chunk)
         n = len(chunk["lat"])
         for k in buf:
             buf[k].append(np.asarray(chunk[k]))
@@ -61,14 +107,7 @@ def count_windows(stream: Iterator[dict], window_size: int) -> Iterator[WindowBa
             for k in buf:
                 buf[k] = [rest[k]]
             have -= window_size
-            yield WindowBatch(
-                sensor_id=head["sensor_id"],
-                timestamp=head["timestamp"],
-                lat=head["lat"],
-                lon=head["lon"],
-                value=head["value"],
-                valid=np.ones(window_size, dtype=bool),
-            )
+            yield _make_batch(head, np.ones(window_size, dtype=bool))
 
 
 def time_windows(
@@ -79,9 +118,12 @@ def time_windows(
     Tuples beyond capacity are dropped with a warning count (bounded-buffer
     semantics, like the paper's Kafka producer under burst).
     """
-    buf: dict[str, list] = {k: [] for k in ("sensor_id", "timestamp", "lat", "lon", "value")}
+    buf: dict[str, list] | None = None
     t_edge: float | None = None
     for chunk in stream:
+        if buf is None:
+            buf = {k: [] for k in chunk}
+        _check_keys(buf, chunk)
         ts = np.asarray(chunk["timestamp"], dtype=np.float64)
         if t_edge is None and len(ts):
             t_edge = float(ts[0]) + window_seconds
@@ -89,17 +131,11 @@ def time_windows(
         while t_edge is not None and len(ts) and ts[-1] >= t_edge:
             cut = int(np.searchsorted(ts, t_edge, side="left"))
             for k in buf:
-                buf[k].append(np.asarray(chunk[k])[lo:cut] if k == "timestamp" else np.asarray(chunk[k])[lo:cut])
+                buf[k].append(np.asarray(chunk[k])[lo:cut])
             cat = {k: np.concatenate(v) if v else np.zeros(0) for k, v in buf.items()}
             size = min(len(cat["lat"]), capacity)
-            yield WindowBatch(
-                sensor_id=_pad(cat["sensor_id"][:size], capacity),
-                timestamp=_pad(cat["timestamp"][:size], capacity),
-                lat=_pad(cat["lat"][:size], capacity),
-                lon=_pad(cat["lon"][:size], capacity),
-                value=_pad(cat["value"][:size], capacity),
-                valid=np.arange(capacity) < size,
-            )
+            head = {k: v[:size] for k, v in cat.items()}
+            yield _make_batch(head, np.arange(capacity) < size, pad_to=capacity)
             for k in buf:
                 buf[k] = []
             lo = cut
@@ -108,15 +144,9 @@ def time_windows(
             arr = np.asarray(chunk[k])[lo:]
             if len(arr):
                 buf[k].append(arr)
-    if any(len(v) for v in buf.values()):
+    if buf is not None and any(len(v) for v in buf.values()):
         cat = {k: (np.concatenate(v) if v else np.zeros(0)) for k, v in buf.items()}
         size = min(len(cat["lat"]), capacity)
         if size:
-            yield WindowBatch(
-                sensor_id=_pad(cat["sensor_id"][:size], capacity),
-                timestamp=_pad(cat["timestamp"][:size], capacity),
-                lat=_pad(cat["lat"][:size], capacity),
-                lon=_pad(cat["lon"][:size], capacity),
-                value=_pad(cat["value"][:size], capacity),
-                valid=np.arange(capacity) < size,
-            )
+            head = {k: v[:size] for k, v in cat.items()}
+            yield _make_batch(head, np.arange(capacity) < size, pad_to=capacity)

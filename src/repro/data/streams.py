@@ -14,8 +14,11 @@ same statistical shape:
     is the point of the Chicago dataset), PM2.5 = smooth spatial field +
     temporal drift + heteroscedastic noise.
 
-Generators yield dict chunks (sensor_id, timestamp, lat, lon, value) so they
-plug straight into core.windows.
+Generators yield dict chunks (sensor_id, timestamp, lat, lon, value, plus a
+second named value column per workload — mobility carries ``occupancy``,
+air quality carries ``temperature``) so they plug straight into
+core.windows, and multi-column ``Query`` aggregates have real signal to
+chew on.
 """
 
 from __future__ import annotations
@@ -65,6 +68,12 @@ def shenzhen_taxi_stream(
         )
         speed = 12.0 + 55.0 * np.tanh(d / 0.08) + rng.normal(0, 4.0, chunk_size)
         speed = np.clip(speed, 0.0, 120.0)
+        # occupancy: taxis near attractors are likelier to carry a fare —
+        # anti-correlated with speed, spatially smooth (a second column for
+        # multi-aggregate queries).
+        occupancy = np.clip(
+            0.85 - 0.6 * np.tanh(d / 0.08) + rng.normal(0, 0.08, chunk_size), 0.0, 1.0
+        )
         ts = t + np.sort(rng.uniform(0, 60.0, chunk_size))
         t += 60.0
         yield dict(
@@ -73,6 +82,7 @@ def shenzhen_taxi_stream(
             lat=pos_ids[:, 0].astype(np.float32),
             lon=pos_ids[:, 1].astype(np.float32),
             value=speed.astype(np.float32),
+            occupancy=occupancy.astype(np.float32),
         )
 
 
@@ -103,6 +113,14 @@ def chicago_aq_stream(
         drift = 4.0 * np.sin(2 * np.pi * (t / 86_400.0))  # diurnal cycle
         pm = base[ids] + drift + rng.gamma(2.0, 1.5, chunk_size) - 3.0
         pm = np.clip(pm, 0.5, 150.0)
+        # temperature: lakefront gradient + diurnal swing + sensor noise (a
+        # second column so one window answers PM2.5 and temperature queries).
+        temp = (
+            22.0
+            - 6.0 * (sensor_pos[ids, 1] - lon_lo) / (lon_hi - lon_lo)
+            + 5.0 * np.sin(2 * np.pi * (t / 86_400.0) - np.pi / 3)
+            + rng.normal(0, 0.8, chunk_size)
+        )
         ts = t + np.sort(rng.uniform(0, 600.0, chunk_size))
         t += 600.0
         yield dict(
@@ -111,6 +129,7 @@ def chicago_aq_stream(
             lat=sensor_pos[ids, 0].astype(np.float32),
             lon=sensor_pos[ids, 1].astype(np.float32),
             value=pm.astype(np.float32),
+            temperature=temp.astype(np.float32),
         )
 
 

@@ -198,6 +198,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, outdir: str,
         t_compile = time.time() - t0
         mem = compiled.memory_analysis()
         xla_cost = compiled.cost_analysis() or {}
+        if isinstance(xla_cost, (list, tuple)):  # older jax: list of dicts
+            xla_cost = xla_cost[0] if xla_cost else {}
         text = compiled.as_text()
         mine = hlo.analyze_module(text, chips)
         pcounts = count_params(cfg)

@@ -13,18 +13,18 @@ from __future__ import annotations
 
 import jax
 
+from ..sharding.compat import compat_make_mesh, compat_shard_map  # re-export
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=axis_types)
+    return compat_make_mesh(shape, axes)
 
 
 def make_test_mesh(shape=(2, 2, 2), axes=("pod", "data", "model")):
     """Small mesh for CI-scale sharding tests (8 host devices)."""
-    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=axis_types)
+    return compat_make_mesh(shape, axes)
 
 
 def data_axes(mesh) -> tuple[str, ...]:

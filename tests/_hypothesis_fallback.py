@@ -1,0 +1,82 @@
+"""Minimal stand-in for `hypothesis` when it is not installed.
+
+Provides just enough of the `given/settings/strategies` surface for this
+repo's property tests to run as deterministic parameter sweeps: each
+strategy yields boundary values plus seeded-random draws, and ``@given``
+runs the test once per drawn example.  Far weaker than real hypothesis (no
+shrinking, no adaptive search) — install `hypothesis` for the real thing;
+CI does.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+import numpy as np
+
+_EXAMPLES = 10  # examples per @given when falling back
+
+
+class _Strategy:
+    def __init__(self, sampler):
+        self._sampler = sampler
+
+    def sample(self, rng, i):
+        return self._sampler(rng, i)
+
+
+class strategies:  # noqa: N801 - mimics `hypothesis.strategies` module
+    @staticmethod
+    def integers(min_value, max_value):
+        bounds = [min_value, max_value, min_value + (max_value - min_value) // 2]
+
+        def sampler(rng, i):
+            if i < len(bounds):
+                return int(bounds[i])
+            return int(rng.integers(min_value, max_value + 1))
+
+        return _Strategy(sampler)
+
+    @staticmethod
+    def floats(min_value, max_value, allow_nan=False, width=64):
+        bounds = [min_value, max_value, (min_value + max_value) / 2.0]
+
+        def sampler(rng, i):
+            x = bounds[i] if i < len(bounds) else float(rng.uniform(min_value, max_value))
+            if width == 32:
+                x = float(np.float32(x))
+                # float32 rounding may step outside the closed interval
+                x = min(max(x, float(np.float32(min_value))), float(np.float32(max_value)))
+            return float(x)
+
+        return _Strategy(sampler)
+
+
+st = strategies
+
+
+def given(**strats):
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            rng = np.random.default_rng(0)
+            for i in range(_EXAMPLES):
+                drawn = {k: s.sample(rng, i) for k, s in strats.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # present a signature WITHOUT the strategy params, so pytest does
+        # not go looking for fixtures named after them
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        sig = inspect.signature(fn)
+        keep = [p for name, p in sig.parameters.items() if name not in strats]
+        wrapper.__signature__ = sig.replace(parameters=keep)
+        return wrapper
+
+    return deco
+
+
+def settings(*args, **kwargs):
+    def deco(fn):
+        return fn
+
+    return deco

@@ -63,10 +63,12 @@ def test_restore_reshards_to_different_mesh(tmp_path):
     make_array_from_callback (here: host -> 1-device NamedSharding)."""
     from jax.sharding import NamedSharding, PartitionSpec as P
 
+    from repro.sharding.compat import compat_make_mesh
+
     m = CheckpointManager(str(tmp_path), async_save=False)
     st = _state()
     m.save(3, st)
-    mesh = jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat_make_mesh((1,), ("data",))
     shardings = jax.tree.map(lambda _: NamedSharding(mesh, P()), st)
     restored = m.restore_latest(st, shardings=shardings)
     assert restored is not None

@@ -9,6 +9,13 @@ import jax.numpy as jnp
 from repro.launch.hlo import analyze_module, loop_trip_counts
 
 
+def _xla_cost(compiled) -> dict:
+    """Normalize Compiled.cost_analysis() across jax versions: older
+    releases return a one-element list of dicts, newer return the dict."""
+    ca = compiled.cost_analysis()
+    return ca[0] if isinstance(ca, (list, tuple)) else ca
+
+
 @pytest.fixture(scope="module")
 def compiled_pair():
     D = 256
@@ -33,14 +40,14 @@ def compiled_pair():
 
 def test_flops_match_xla_on_unrolled(compiled_pair):
     cu, _ = compiled_pair
-    xla = cu.cost_analysis()
+    xla = _xla_cost(cu)
     mine = analyze_module(cu.as_text(), 1)
     assert mine.flops == pytest.approx(xla["flops"], rel=0.02)
 
 
 def test_bytes_close_to_xla_on_unrolled(compiled_pair):
     cu, _ = compiled_pair
-    xla = cu.cost_analysis()
+    xla = _xla_cost(cu)
     mine = analyze_module(cu.as_text(), 1)
     assert mine.bytes_accessed == pytest.approx(xla["bytes accessed"], rel=0.5)
 
@@ -53,7 +60,7 @@ def test_loop_multiplier_applied(compiled_pair):
     assert ms.flops == pytest.approx(mu.flops, rel=0.02)
     assert 8 in loop_trip_counts(cs.as_text())
     # XLA's own count misses the trip multiplier
-    assert cs.cost_analysis()["flops"] < mu.flops / 4
+    assert _xla_cost(cs)["flops"] < mu.flops / 4
 
 
 def test_collective_model_constants():

@@ -1,0 +1,413 @@
+"""Declarative query layer: plan lowering, accumulator merge exactness,
+preagg == raw per aggregate kind, grouped/ROI correctness, legacy shim."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    SHENZHEN_BBOX,
+    AggSpec,
+    EdgeCloudPipeline,
+    PipelineConfig,
+    Query,
+    estimators,
+    geohash,
+    lower,
+    make_table,
+    sampling,
+    windows,
+)
+from repro.core.pipeline import _zero_overflow
+from repro.core.query import ACCUMULATOR_FIELDS, KINDS
+from repro.data.streams import materialize, shenzhen_taxi_stream
+
+
+@pytest.fixture(scope="module")
+def table():
+    return make_table(*SHENZHEN_BBOX, precision=5)
+
+
+@pytest.fixture(scope="module")
+def window():
+    stream = shenzhen_taxi_stream(num_chunks=3, seed=0)
+    return next(windows.count_windows(stream, 30_000))
+
+
+# -- plan lowering -----------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_lowering_accumulator_sets(table, kind):
+    """Each AggSpec lowers to its documented accumulator field set."""
+    q = Query(aggs=(AggSpec(kind, "value"),))
+    plan = lower(q, table)
+    assert plan.columns == ("value",)
+    assert plan.accumulator_map[f"{kind}_value"] == ACCUMULATOR_FIELDS[kind]
+    # error-bounded kinds need the second moment; exact/extrema kinds don't
+    needs_m2 = kind in ("sum", "mean", "var")
+    assert ("m2" in plan.accumulator_map[f"{kind}_value"]) == needs_m2
+
+
+def test_lowering_columns_and_groups(table):
+    q = Query(
+        aggs=(AggSpec("mean", "value"), AggSpec("max", "occupancy"), AggSpec("count", "value")),
+        group_by="neighborhood",
+    )
+    plan = lower(q, table)
+    assert plan.columns == ("value", "occupancy")  # deduped, order-preserving
+    assert plan.num_groups == table.num_neighborhoods
+    plan_s = lower(Query(aggs=q.aggs, group_by="stratum"), table)
+    assert plan_s.num_groups == table.num_strata
+
+
+def test_query_validation(table):
+    with pytest.raises(ValueError):
+        Query(aggs=())
+    with pytest.raises(ValueError):
+        Query(aggs=(AggSpec("median", "value"),))
+    with pytest.raises(ValueError):
+        Query(aggs=(AggSpec("sum", "value"),), group_by="city")
+    with pytest.raises(ValueError):
+        Query(aggs=(AggSpec("sum", "value"), AggSpec("sum", "value")))
+    with pytest.raises(ValueError):
+        lower(Query(aggs=(AggSpec("sum", "value"),), roi="wx4g0e1"), table)  # finer than grid
+    with pytest.raises(ValueError):
+        Query(aggs=(AggSpec("sum", "value"),), roi=123)  # not a bbox/prefix
+    with pytest.raises(ValueError):
+        Query(aggs=(AggSpec("sum", "value"),), roi=(1, 2, 3))  # malformed bbox
+
+
+# -- generalized accumulator merges ------------------------------------------
+
+
+def _column_parts(rng, n=12_000, s=20, shards=5):
+    sidx = jnp.asarray(rng.integers(0, s, n), jnp.int32)
+    vals = jnp.asarray(rng.normal(40, 12, n), jnp.float32)
+    mask = jnp.asarray(rng.random(n) < 0.6)
+    parts = []
+    for c in np.array_split(np.arange(n), shards):
+        c = jnp.asarray(c)
+        parts.append(estimators.column_stats(vals[c], sidx[c], mask[c], s + 1))
+    glob = estimators.column_stats(vals, sidx, mask, s + 1)
+    return parts, glob
+
+
+def test_column_stats_merge_exact_across_shards(rng):
+    """Simulated shard split: pairwise merges reproduce the global
+    accumulator — exactly for count/min/max, to fp tolerance for moments."""
+    parts, glob = _column_parts(rng)
+    merged = estimators.merge_all_columns(parts)
+    np.testing.assert_array_equal(np.asarray(merged.n), np.asarray(glob.n))
+    np.testing.assert_array_equal(np.asarray(merged.total), np.asarray(glob.total))
+    np.testing.assert_array_equal(np.asarray(merged.min), np.asarray(glob.min))
+    np.testing.assert_array_equal(np.asarray(merged.max), np.asarray(glob.max))
+    np.testing.assert_allclose(np.asarray(merged.wsum), np.asarray(glob.wsum), rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(merged.mean), np.asarray(glob.mean), rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(merged.m2), np.asarray(glob.m2), rtol=2e-4, atol=2e-2)
+
+
+def test_column_stats_merge_associative(rng):
+    parts, _ = _column_parts(rng, shards=3)
+    a, b, c = parts
+    left = estimators.merge_column_stats(estimators.merge_column_stats(a, b), c)
+    right = estimators.merge_column_stats(a, estimators.merge_column_stats(b, c))
+    np.testing.assert_array_equal(np.asarray(left.min), np.asarray(right.min))
+    np.testing.assert_array_equal(np.asarray(left.max), np.asarray(right.max))
+    np.testing.assert_allclose(np.asarray(left.m2), np.asarray(right.m2), rtol=2e-4, atol=2e-2)
+    np.testing.assert_allclose(np.asarray(left.wsum), np.asarray(right.wsum), rtol=2e-5)
+
+
+def test_empty_stratum_identities(rng):
+    """Strata with no sampled tuples carry merge identities (0 / ±inf)."""
+    sidx = jnp.zeros(100, jnp.int32)  # everything in stratum 0 of 4
+    vals = jnp.asarray(rng.normal(0, 1, 100), jnp.float32)
+    cs = estimators.column_stats(vals, sidx, jnp.ones(100, bool), 4)
+    assert float(cs.n[2]) == 0.0
+    assert np.isposinf(float(cs.min[2])) and np.isneginf(float(cs.max[2]))
+    # merging an empty accumulator is a no-op
+    merged = estimators.merge_column_stats(cs, jax.tree.map(lambda x: x, cs)._replace(
+        n=jnp.zeros_like(cs.n), total=jnp.zeros_like(cs.total),
+        wsum=jnp.zeros_like(cs.wsum), m2=jnp.zeros_like(cs.m2),
+        mean=jnp.zeros_like(cs.mean),
+        min=jnp.full_like(cs.min, jnp.inf), max=jnp.full_like(cs.max, -jnp.inf)))
+    np.testing.assert_allclose(np.asarray(merged.mean), np.asarray(cs.mean), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(merged.min), np.asarray(cs.min))
+
+
+# -- preagg vs raw agreement, per aggregate kind -----------------------------
+
+
+ALL_AGGS = tuple(AggSpec(k, "value") for k in KINDS) + (
+    AggSpec("mean", "occupancy"),
+    AggSpec("max", "occupancy"),
+)
+
+
+@pytest.mark.parametrize("group_by", [None, "neighborhood"])
+def test_preagg_equals_raw_per_kind(table, window, group_by):
+    """Both transmission modes give identical estimates for the same sample,
+    for every aggregate kind (the §3.6.4 property, lifted to the query layer)."""
+    pipe = EdgeCloudPipeline(table, PipelineConfig(raw_capacity=30_000))
+    res = {}
+    for mode in ("preagg", "raw"):
+        q = Query(aggs=ALL_AGGS, mode=mode, group_by=group_by)
+        res[mode] = pipe.execute(q, jax.random.key(7), window, fraction=0.7)
+    for spec in ALL_AGGS:
+        a = np.asarray(res["preagg"].estimates[spec.key].value)
+        b = np.asarray(res["raw"].estimates[spec.key].value)
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6, err_msg=spec.key)
+        ma = np.asarray(res["preagg"].estimates[spec.key].moe)
+        mb = np.asarray(res["raw"].estimates[spec.key].moe)
+        np.testing.assert_allclose(ma, mb, rtol=1e-4, atol=1e-6, err_msg=spec.key)
+
+
+# -- aggregate correctness ----------------------------------------------------
+
+
+def test_full_fraction_matches_numpy_oracle(table, window):
+    """At fraction=1.0 every kind must equal its exact numpy groupby value."""
+    pipe = EdgeCloudPipeline(table)
+    q = Query(aggs=tuple(AggSpec(k, "value") for k in KINDS))
+    r = pipe.execute(q, jax.random.key(0), window, fraction=1.0)
+    sidx = np.asarray(table.assign(jnp.asarray(window.lat), jnp.asarray(window.lon)))
+    v = window.value[sidx < table.num_strata]  # in-region tuples only
+    assert float(r.estimates["count_value"].value) == len(v)
+    assert float(r.estimates["sum_value"].value) == pytest.approx(v.sum(), rel=1e-4)
+    assert float(r.estimates["mean_value"].value) == pytest.approx(v.mean(), rel=1e-5)
+    assert float(r.estimates["min_value"].value) == pytest.approx(v.min(), abs=1e-6)
+    assert float(r.estimates["max_value"].value) == pytest.approx(v.max(), abs=1e-6)
+    # var: within+between decomposition over strata == population variance
+    assert float(r.estimates["var_value"].value) == pytest.approx(v.var(), rel=2e-2)
+    # full sample -> zero-width intervals for the error-bounded kinds
+    assert float(r.estimates["mean_value"].moe) == pytest.approx(0.0, abs=1e-5)
+
+
+def test_count_exact_under_sampling(table, window):
+    """Population counts are observed, not sampled: COUNT is exact at any
+    fraction and the sampled mean stays near the truth."""
+    pipe = EdgeCloudPipeline(table)
+    q = Query(aggs=(AggSpec("count", "value"), AggSpec("mean", "value")))
+    r_lo = pipe.execute(q, jax.random.key(1), window, fraction=0.2)
+    r_hi = pipe.execute(q, jax.random.key(2), window, fraction=1.0)
+    assert float(r_lo.estimates["count_value"].value) == float(
+        r_hi.estimates["count_value"].value
+    )
+    true = float(r_hi.estimates["mean_value"].value)
+    assert float(r_lo.estimates["mean_value"].value) == pytest.approx(true, rel=0.02)
+
+
+def test_grouped_neighborhood_matches_oracle(table, window):
+    """group_by=neighborhood at full fraction == numpy per-group means."""
+    pipe = EdgeCloudPipeline(table)
+    q = Query(aggs=(AggSpec("mean", "value"), AggSpec("count", "value")), group_by="neighborhood")
+    r = pipe.execute(q, jax.random.key(0), window, fraction=1.0)
+    mean_g = np.asarray(r.estimates["mean_value"].value)
+    count_g = np.asarray(r.estimates["count_value"].value)
+    assert mean_g.shape == (table.num_neighborhoods,)
+    sidx = np.asarray(table.assign(jnp.asarray(window.lat), jnp.asarray(window.lon)))
+    nb = np.asarray(table.neighborhood)[sidx]
+    for g in range(table.num_neighborhoods):
+        sel = (nb == g) & (sidx < table.num_strata)
+        assert count_g[g] == sel.sum()
+        if sel.sum():
+            assert mean_g[g] == pytest.approx(window.value[sel].mean(), rel=1e-4)
+
+
+def test_roi_bbox_and_prefix(table, window):
+    """bbox ROI == numpy mask; geohash-prefix ROI == parent-code mask."""
+    pipe = EdgeCloudPipeline(table)
+    lat_lo, lat_hi = np.quantile(window.lat, [0.25, 0.75])
+    lon_lo, lon_hi = np.quantile(window.lon, [0.25, 0.75])
+    bbox = ((float(lat_lo), float(lat_hi)), (float(lon_lo), float(lon_hi)))
+    q = Query(aggs=(AggSpec("count", "value"), AggSpec("mean", "value")), roi=bbox)
+    r = pipe.execute(q, jax.random.key(0), window, fraction=1.0)
+    sidx = np.asarray(table.assign(jnp.asarray(window.lat), jnp.asarray(window.lon)))
+    in_roi = (
+        (window.lat >= lat_lo) & (window.lat <= lat_hi)
+        & (window.lon >= lon_lo) & (window.lon <= lon_hi)
+        & (sidx < table.num_strata)
+    )
+    assert int(r.estimates["count_value"].value) == int(in_roi.sum())
+    assert float(r.estimates["mean_value"].value) == pytest.approx(
+        window.value[in_roi].mean(), rel=1e-4
+    )
+    # geohash-prefix ROI: the densest precision-3 cell
+    codes3 = np.asarray(
+        geohash.encode(jnp.asarray(window.lat), jnp.asarray(window.lon), 3)
+    )
+    top = np.bincount(codes3 % (1 << 15)).argmax()  # pick a frequent cell
+    code = codes3[codes3 % (1 << 15) == top][0]
+    prefix = geohash.to_strings(np.asarray([code], np.uint64), 3)[0]
+    qp = Query(aggs=(AggSpec("count", "value"),), roi=prefix)
+    rp = pipe.execute(qp, jax.random.key(0), window, fraction=1.0)
+    in_cell = (codes3 == code) & (sidx < table.num_strata)
+    assert int(rp.estimates["count_value"].value) == int(in_cell.sum())
+    assert int(rp.n_overflow) == window.capacity - int(in_cell.sum())
+
+
+def test_multi_column_window(table, window):
+    """One window answers aggregates over several named columns at once."""
+    assert "occupancy" in window.columns
+    pipe = EdgeCloudPipeline(table)
+    q = Query(aggs=(AggSpec("mean", "value"), AggSpec("mean", "occupancy")))
+    r = pipe.execute(q, jax.random.key(0), window, fraction=1.0)
+    assert float(r.estimates["mean_occupancy"].value) == pytest.approx(
+        float(window.extra["occupancy"].mean()), rel=1e-3
+    )
+    with pytest.raises(KeyError):
+        pipe.execute(
+            Query(aggs=(AggSpec("mean", "humidity"),)), jax.random.key(0), window
+        )
+
+
+def test_moe_shrinks_with_fraction(table, window):
+    pipe = EdgeCloudPipeline(table)
+    q = Query(aggs=(AggSpec("mean", "value"),))
+    moes = [
+        float(pipe.execute(q, jax.random.key(5), window, fraction=f).estimates["mean_value"].moe)
+        for f in (0.1, 0.4, 0.9)
+    ]
+    assert moes[0] > moes[1] > moes[2]
+
+
+# -- legacy shim --------------------------------------------------------------
+
+
+def test_process_window_shim_matches_legacy_path(table, window):
+    """The shim reproduces the pre-redesign computation: edge_sample +
+    sample_stats + estimate, same key, same ops."""
+    n = window.capacity
+    lat = jnp.asarray(window.lat)
+    lon = jnp.asarray(window.lon)
+    val = jnp.asarray(window.value)
+    valid = jnp.asarray(window.valid)
+    pipe = EdgeCloudPipeline(table, PipelineConfig(mode="preagg"))
+    wr = pipe.process_window(jax.random.key(3), lat, lon, val, valid, jnp.float32(0.7))
+    # pre-redesign reference, computed by hand
+    from repro.core.pipeline import edge_sample
+
+    sidx, sample = edge_sample(jax.random.key(3), table, lat, lon, valid, 0.7, "srs")
+    stats = estimators.sample_stats(val, sidx, sample.mask, table.num_slots, counts=sample.counts)
+    ref = estimators.estimate(_zero_overflow(stats), 0.95)
+    assert float(wr.estimate.mean) == pytest.approx(float(ref.mean), rel=1e-6)
+    assert float(wr.estimate.sum) == pytest.approx(float(ref.sum), rel=1e-6)
+    assert float(wr.estimate.moe) == pytest.approx(float(ref.moe), rel=1e-5)
+    assert int(wr.n_sampled) == int(jnp.sum(sample.mask))
+    assert int(wr.n_valid) == int(jnp.sum(valid))
+    assert int(wr.comm_bytes) == 4 * 4 * table.num_slots  # legacy payload
+
+
+def test_execute_canonical_query_agrees_with_shim(table, window):
+    """execute() on the canonical SUM/MEAN query == process_window."""
+    pipe = EdgeCloudPipeline(table)
+    lat, lon = jnp.asarray(window.lat), jnp.asarray(window.lon)
+    val, valid = jnp.asarray(window.value), jnp.asarray(window.valid)
+    wr = pipe.process_window(jax.random.key(9), lat, lon, val, valid, jnp.float32(0.6))
+    q = Query(aggs=(AggSpec("sum", "value"), AggSpec("mean", "value")))
+    r = pipe.execute(
+        q, jax.random.key(9), {"lat": lat, "lon": lon, "valid": valid, "value": val}, 0.6
+    )
+    assert float(r.estimates["mean_value"].value) == pytest.approx(float(wr.estimate.mean), rel=1e-6)
+    assert float(r.estimates["sum_value"].value) == pytest.approx(float(wr.estimate.sum), rel=1e-6)
+    assert float(r.estimates["mean_value"].moe) == pytest.approx(float(wr.estimate.moe), rel=1e-5)
+
+
+def test_preagg_payload_shares_counts_and_prunes_extrema(table, window):
+    """n/total cross the uplink once, not once per column; min/max vectors
+    only cross for columns an extrema aggregate actually reads."""
+    pipe = EdgeCloudPipeline(table)
+    one = pipe.execute(Query(aggs=(AggSpec("mean", "value"),)), jax.random.key(0), window, 0.5)
+    two = pipe.execute(
+        Query(aggs=(AggSpec("mean", "value"), AggSpec("mean", "occupancy"))),
+        jax.random.key(0), window, 0.5,
+    )
+    ext = pipe.execute(
+        Query(aggs=(AggSpec("mean", "value"), AggSpec("max", "value"))),
+        jax.random.key(0), window, 0.5,
+    )
+    # a moment-only column ships the legacy 4-vector payload
+    assert int(one.comm_bytes) == 4 * 4 * table.num_slots
+    # each extra moment-only column adds wsum/raw2 vectors only
+    assert int(two.comm_bytes) - int(one.comm_bytes) == 4 * 2 * table.num_slots
+    # an extrema aggregate adds the min/max pair for its column
+    assert int(ext.comm_bytes) - int(one.comm_bytes) == 4 * 2 * table.num_slots
+    plan = lower(Query(aggs=(AggSpec("mean", "value"), AggSpec("max", "value"))), table)
+    assert plan.extrema_columns == ("value",)
+    assert lower(Query(aggs=(AggSpec("mean", "value"),)), table).extrema_columns == ()
+
+
+def test_stream_chunk_key_drift_rejected(table):
+    """Chunks with inconsistent columns raise instead of dropping data."""
+    def drifting():
+        yield dict(sensor_id=np.zeros(5, np.int32), timestamp=np.arange(5.0),
+                   lat=np.zeros(5, np.float32), lon=np.zeros(5, np.float32),
+                   value=np.ones(5, np.float32))
+        yield dict(sensor_id=np.zeros(5, np.int32), timestamp=np.arange(5.0) + 5,
+                   lat=np.zeros(5, np.float32), lon=np.zeros(5, np.float32),
+                   value=np.ones(5, np.float32), occupancy=np.ones(5, np.float32))
+
+    with pytest.raises(ValueError, match="chunk keys"):
+        list(windows.count_windows(drifting(), 10))
+
+
+def test_run_stream_point_estimate_query_keeps_fraction(table):
+    """A query with no error-bounded aggregate cannot drive the QoS loop;
+    the fraction must stay fixed instead of collapsing to min_fraction."""
+    stream = shenzhen_taxi_stream(num_chunks=3, seed=4)
+    wnds = list(windows.count_windows(stream, 15_000))
+    pipe = EdgeCloudPipeline(table)
+    q = Query(aggs=(AggSpec("count", "value"), AggSpec("max", "value")))
+    history, state = pipe.run_stream(wnds, initial_fraction=0.5, key=jax.random.key(0), query=q)
+    assert [frac for _, frac in history] == [0.5] * len(wnds)
+
+
+def test_run_stream_grouped_query_adapts(table):
+    """Empty groups report RE=inf; the controller must track the worst
+    *finite* group instead of freezing on inf."""
+    from repro.core.feedback import SLO
+
+    stream = shenzhen_taxi_stream(num_chunks=3, seed=5)
+    wnds = list(windows.count_windows(stream, 15_000))
+    pipe = EdgeCloudPipeline(table)
+    q = Query(aggs=(AggSpec("mean", "value"),), group_by="stratum")  # many empty strata
+    history, state = pipe.run_stream(
+        wnds, slo=SLO(target_relative_error=0.5), initial_fraction=0.9,
+        key=jax.random.key(0), query=q,
+    )
+    # a loose SLO and a finite worst-group RE must let the fraction drop
+    assert float(state.fraction) < 0.9
+
+
+def test_run_stream_all_groups_empty_holds_fraction(table):
+    """ROI with no coverage -> every group RE is inf; the controller must
+    hold the fraction steady, not collapse it to min_fraction."""
+    stream = shenzhen_taxi_stream(num_chunks=2, seed=6)
+    wnds = list(windows.count_windows(stream, 10_000))
+    pipe = EdgeCloudPipeline(table)
+    q = Query(
+        aggs=(AggSpec("mean", "value"),), group_by="neighborhood",
+        roi=((0.0, 1.0), (0.0, 1.0)),  # far outside the city
+    )
+    history, state = pipe.run_stream(wnds, initial_fraction=0.5, key=jax.random.key(0), query=q)
+    assert [frac for _, frac in history] == pytest.approx([0.5] * len(wnds))
+
+
+def test_run_stream_with_query(table):
+    """The QoS loop drives a declarative query end-to-end."""
+    from repro.core.feedback import SLO
+
+    stream = shenzhen_taxi_stream(num_chunks=4, seed=2)
+    wnds = list(windows.count_windows(stream, 15_000))
+    pipe = EdgeCloudPipeline(table)
+    q = Query(aggs=(AggSpec("mean", "value"), AggSpec("count", "value")))
+    history, state = pipe.run_stream(
+        wnds, slo=SLO(target_relative_error=0.01), initial_fraction=0.5,
+        key=jax.random.key(0), query=q,
+    )
+    assert len(history) == len(wnds)
+    for res, frac in history:
+        assert float(res.estimates["mean_value"].value) > 0
+        assert 0.0 < frac <= 1.0

@@ -29,8 +29,9 @@ import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.core import make_table, contiguous_plan, SHENZHEN_BBOX
 from repro.core.routing import exchange
+from repro.launch.mesh import compat_make_mesh, compat_shard_map
 
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat_make_mesh((8,), ("data",))
 table = make_table(*SHENZHEN_BBOX, precision=5, neighborhood_precision=3)
 plan = contiguous_plan(table, num_shards=8)
 rng = np.random.default_rng(0)
@@ -42,7 +43,7 @@ def shard_fn(s, p):
     valid, rx_s, rx_p, dropped = exchange(plan, s, p, "data", capacity=256)
     return valid, rx_s, rx_p, dropped[None]
 
-mapped = jax.jit(jax.shard_map(shard_fn, mesh=mesh,
+mapped = jax.jit(compat_shard_map(shard_fn, mesh=mesh,
     in_specs=(P("data"), P("data")), out_specs=(P("data"), P("data"), P("data"), P("data")),
     check_vma=False))
 valid, rx_s, rx_p, dropped = mapped(sidx, payload)
@@ -69,11 +70,11 @@ def test_sharded_flash_decode_matches_reference():
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np, jax, jax.numpy as jnp
-from repro.launch.mesh import make_test_mesh
+from repro.launch.mesh import compat_make_mesh
 from repro.sharding.logical import default_rules, use_rules
 from repro.models.layers import decode_attention, sharded_decode_attention
 
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = compat_make_mesh((2, 4), ("data", "model"))
 rng = np.random.default_rng(0)
 B, T, H, K, dh = 4, 64, 8, 2, 16
 q = jnp.asarray(rng.normal(0, 1, (B, 1, H, dh)), jnp.float32)
@@ -105,8 +106,9 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.train import compression
+from repro.launch.mesh import compat_make_mesh, compat_shard_map
 
-mesh = jax.make_mesh((8,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat_make_mesh((8,), ("pod",))
 rng = np.random.default_rng(0)
 g_global = jnp.asarray(rng.normal(0, 1, (8, 64)), jnp.float32)  # per-pod grads
 
@@ -116,7 +118,7 @@ def shard_fn(g):
         {"g": g}, jax.random.key(0), 0.5, st, axis="pod")
     return red["g"]
 
-mapped = jax.jit(jax.shard_map(shard_fn, mesh=mesh, in_specs=(P("pod"),),
+mapped = jax.jit(compat_shard_map(shard_fn, mesh=mesh, in_specs=(P("pod"),),
                  out_specs=P("pod"), check_vma=False))
 out = np.asarray(mapped(g_global)).reshape(8, -1)
 # identical masks (shared key): every pod holds the same reduced value

@@ -124,7 +124,8 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np, jax, jax.numpy as jnp
 from repro.core import make_table, SHENZHEN_BBOX
 from repro.core.pipeline import EdgeCloudPipeline, PipelineConfig
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.sharding.compat import compat_make_mesh
+mesh = compat_make_mesh((8,), ("data",))
 t = make_table(*SHENZHEN_BBOX, precision=5)
 rng = np.random.default_rng(0)
 N = 64_000

@@ -7,7 +7,6 @@ import time
 import numpy as np
 
 import jax
-import jax.numpy as jnp
 
 
 def time_call(fn, *args, warmup: int = 2, iters: int = 5) -> float:

@@ -1,14 +1,15 @@
-"""Query-layer latency: 3-aggregate grouped query vs legacy single estimate.
+"""Query-layer latency: fused sessions, grouped queries, legacy estimate.
 
 Measures per-window device latency of (a) the legacy `process_window`
 single SUM/MEAN path, (b) a 3-aggregate neighborhood-grouped declarative
-query, and (c) the same query ungrouped — the cost of the API redesign's
-generality on the hot path.
+query, (c) the same query ungrouped — the cost of the API redesign's
+generality on the hot path — and (d) the headline of the session redesign:
+a fused `StreamSession` answering N registered queries with ONE
+stratify+EdgeSOS pass vs N independent `execute` calls, for
+N ∈ {1, 4, 16}, in wall time and edge->cloud collective bytes.
 """
 
 from __future__ import annotations
-
-import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -19,6 +20,7 @@ from repro.core import (
     EdgeCloudPipeline,
     PipelineConfig,
     Query,
+    StreamSession,
     make_table,
     windows,
 )
@@ -28,6 +30,20 @@ from .common import csv_line, time_call
 
 WINDOW = 50_000
 FRACTION = 0.8
+
+
+def _query_set(n: int) -> list[Query]:
+    """n distinct single-aggregate queries sharing one sampling signature
+    (so the whole set is one fusion group)."""
+    kinds = ("mean", "sum", "var", "count", "min", "max")
+    cols = ("value", "occupancy")
+    return [
+        Query(
+            aggs=(AggSpec(kinds[i % len(kinds)], cols[i % len(cols)], name=f"a{i}"),),
+            confidence=0.95 if i % 2 == 0 else 0.99,
+        )
+        for i in range(n)
+    ]
 
 
 def run():
@@ -56,4 +72,36 @@ def run():
         yield csv_line(
             f"query_bench/{name}", us_q,
             f"window={WINDOW};aggs={len(aggs3)};vs_legacy={us_q / max(us, 1e-9):.2f}x",
+        )
+
+    # fused session vs N independent executes (the multi-query fusion win);
+    # both arms consume the same device-resident column mapping
+    for n in (1, 4, 16):
+        queries = _query_set(n)
+        sess = StreamSession(pipe, initial_fraction=FRACTION)
+        for q in queries:
+            sess.register(q)
+
+        def fused_step():
+            step = sess.step(key, win)
+            return [r.estimates for r in step.results.values()]
+
+        def independent():
+            return [pipe.execute(q, key, win, FRACTION).estimates for q in queries]
+
+        us_fused = time_call(fused_step)
+        us_indep = time_call(independent)
+        fused_bytes = sess.step(key, win).comm_bytes
+        indep_bytes = sum(
+            int(pipe.execute(q, key, win, FRACTION).comm_bytes) for q in queries
+        )
+        yield csv_line(
+            f"query_bench/session_fused_n{n}", us_fused,
+            f"window={WINDOW};queries={n};bytes={fused_bytes}",
+        )
+        yield csv_line(
+            f"query_bench/independent_n{n}", us_indep,
+            f"window={WINDOW};queries={n};bytes={indep_bytes};"
+            f"fused_speedup={us_indep / max(us_fused, 1e-9):.2f}x;"
+            f"bytes_ratio={indep_bytes / max(fused_bytes, 1):.2f}x",
         )

@@ -21,7 +21,6 @@ if os.environ.get("_REPRO_AQP_CHILD") != "1":
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import CHICAGO_BBOX, make_table, windows
 from repro.core.pipeline import EdgeCloudPipeline, PipelineConfig

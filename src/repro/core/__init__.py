@@ -9,15 +9,21 @@ Layers (bottom-up):
                 MoE/RE (eqs 1-10)
   routing     — spatial-aware data distribution (topic-per-neighborhood)
   feedback    — QoS loop adapting the sampling fraction to SLOs
-  windows     — tumbling count/time windows with named value columns
+  windows     — tumbling count/time windows with named value columns, plus
+                pane-based ``WindowSpec`` (tumbling/sliding/hopping) shapes
   query       — the declarative AQP layer: ``Query``/``AggSpec`` specs
                 (sum|mean|count|min|max|var over named columns, optional
                 stratum/neighborhood group-by and bbox/geohash-prefix ROI)
                 lowered by ``query.lower`` into an edge partial-aggregation
-                program plus a cloud consolidation/finalize step
+                program plus a cloud consolidation/finalize step; ``fuse``
+                unions lowered plans into one shared edge pass
   pipeline    — the engine executing lowered plans (Algorithm 2): edge
                 sample -> mergeable accumulators -> collective -> cloud
                 finalize, in pre-aggregated or raw transmission mode
+  session     — the continuous-query engine: ``StreamSession`` registers
+                any number of queries (each with an SLO and WindowSpec),
+                serves each fusion group with one sampling pass per pane,
+                and merges pane accumulators into sliding/hopping windows
 
 Typical use::
 
@@ -35,7 +41,7 @@ The legacy ``pipe.process_window(...)`` single-estimate API remains as a
 shim over the canonical ``SUM/MEAN(value)`` query.
 """
 
-from . import estimators, feedback, geohash, query, routing, sampling, stratify, windows
+from . import estimators, feedback, geohash, query, routing, sampling, session, stratify, windows
 from .estimators import (
     ColumnStats,
     Estimate,
@@ -43,18 +49,20 @@ from .estimators import (
     column_stats,
     estimate,
     merge_column_stats,
+    merge_column_stats_panes,
     merge_stats,
     psum_column_stats,
     psum_stats,
     sample_stats,
 )
-from .feedback import SLO, ControllerState
+from .feedback import SLO, ControllerState, StackedSLO
 from .pipeline import EdgeCloudPipeline, PipelineConfig, WindowResult, edge_sample
-from .query import AggEstimate, AggSpec, Plan, Query, QueryResult, lower
+from .query import AggEstimate, AggSpec, FusedPlan, Plan, Query, QueryResult, fuse, fusion_key, lower
 from .routing import RoutePlan, balanced_plan, contiguous_plan
 from .sampling import SampleResult, compact, edgesos
+from .session import Registration, SessionStep, StreamSession
 from .stratify import CHICAGO_BBOX, SHENZHEN_BBOX, StratumTable, make_table, make_table_from_codes
-from .windows import WindowBatch
+from .windows import WindowBatch, WindowSpec, pane_windows
 
 __all__ = [
     "AggEstimate",
@@ -64,18 +72,24 @@ __all__ = [
     "ControllerState",
     "EdgeCloudPipeline",
     "Estimate",
+    "FusedPlan",
     "PipelineConfig",
     "Plan",
     "Query",
     "QueryResult",
+    "Registration",
     "RoutePlan",
     "SHENZHEN_BBOX",
     "SLO",
     "SampleResult",
+    "SessionStep",
+    "StackedSLO",
     "StratumStats",
     "StratumTable",
+    "StreamSession",
     "WindowBatch",
     "WindowResult",
+    "WindowSpec",
     "balanced_plan",
     "column_stats",
     "compact",
@@ -85,18 +99,23 @@ __all__ = [
     "estimate",
     "estimators",
     "feedback",
+    "fuse",
+    "fusion_key",
     "geohash",
     "lower",
     "make_table",
     "make_table_from_codes",
     "merge_column_stats",
+    "merge_column_stats_panes",
     "merge_stats",
+    "pane_windows",
     "psum_column_stats",
     "psum_stats",
     "query",
     "routing",
     "sample_stats",
     "sampling",
+    "session",
     "stratify",
     "windows",
 ]

@@ -213,6 +213,34 @@ def merge_all_columns(stats: Sequence[ColumnStats]) -> ColumnStats:
     return out
 
 
+def stack_column_stats(stats: Sequence[ColumnStats]) -> ColumnStats:
+    """Stack accumulators along a new leading pane axis: (P, S+1) fields."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *stats)
+
+
+def merge_column_stats_panes(stacked: ColumnStats) -> ColumnStats:
+    """Vectorized multi-way merge over a leading pane axis.
+
+    Input fields are (P, S+1): P pane accumulators of the same stratum
+    table.  One mean-shift pass merges all panes at once —
+        M2 = Σ_p (M2_p + n_p ȳ_p²) − n ȳ²
+    (the :func:`psum_stats` decomposition applied on a local axis) — instead
+    of P−1 sequential :func:`merge_column_stats` folds.  This is the
+    cloud-side pane merge of sliding/hopping windows: a window's answer is
+    assembled from its panes' accumulators without re-touching raw tuples.
+    """
+    n = jnp.sum(stacked.n, axis=0)
+    total = jnp.sum(stacked.total, axis=0)
+    wsum = jnp.sum(stacked.wsum, axis=0)
+    raw2 = jnp.sum(stacked.m2 + stacked.n * stacked.mean * stacked.mean, axis=0)
+    mean = jnp.where(n > 0, wsum / jnp.maximum(n, 1.0), 0.0)
+    m2 = jnp.maximum(raw2 - n * mean * mean, 0.0)
+    return ColumnStats(
+        n=n, total=total, wsum=wsum, m2=m2, mean=mean,
+        min=jnp.min(stacked.min, axis=0), max=jnp.max(stacked.max, axis=0),
+    )
+
+
 def psum_column_stats(
     stats: ColumnStats, axis_names, shared: ColumnStats | None = None,
     extrema: bool = True,

@@ -82,6 +82,80 @@ def update(
     return ControllerState(fraction=f_new, re_ema=re_ema, steps=state.steps + 1)
 
 
+class StackedSLO(NamedTuple):
+    """Per-query SLO parameters stacked into (Q,) arrays for the vectorized
+    controller of a ``StreamSession`` (``max_downstream_tuples=None`` maps
+    to ``+inf`` so the cap term is a no-op elementwise)."""
+
+    target: jnp.ndarray
+    cap: jnp.ndarray
+    min_fraction: jnp.ndarray
+    max_fraction: jnp.ndarray
+    ema: jnp.ndarray
+    deadband: jnp.ndarray
+
+
+def stack_slos(slos) -> StackedSLO:
+    """Stack a sequence of :class:`SLO` into a :class:`StackedSLO`."""
+    slos = list(slos)
+    return StackedSLO(
+        target=jnp.asarray([s.target_relative_error for s in slos], jnp.float32),
+        cap=jnp.asarray(
+            [jnp.inf if s.max_downstream_tuples is None else float(s.max_downstream_tuples) for s in slos],
+            jnp.float32,
+        ),
+        min_fraction=jnp.asarray([s.min_fraction for s in slos], jnp.float32),
+        max_fraction=jnp.asarray([s.max_fraction for s in slos], jnp.float32),
+        ema=jnp.asarray([s.ema for s in slos], jnp.float32),
+        deadband=jnp.asarray([s.deadband for s in slos], jnp.float32),
+    )
+
+
+def init_vector_state(fractions) -> ControllerState:
+    """Vector controller state: one fraction per registered query."""
+    f = jnp.asarray(fractions, jnp.float32)
+    return ControllerState(
+        fraction=f,
+        re_ema=jnp.zeros_like(f),
+        steps=jnp.zeros(f.shape, jnp.int32),
+    )
+
+
+def update_vector(
+    state: ControllerState,
+    observed_re: jnp.ndarray,
+    window_size: jnp.ndarray,
+    slo: StackedSLO,
+    active: jnp.ndarray | None = None,
+) -> ControllerState:
+    """Elementwise controller step for a vector of registered queries.
+
+    Identical math to :func:`update`, broadcast over the query axis; entries
+    where ``active`` is False (queries that emitted no result this pane, or
+    that have no error-bounded aggregate) keep their state unchanged and do
+    not advance ``steps``.  The latency budget caps each query's downstream
+    volume ``f·N`` independently (``cap=inf`` disables it elementwise).
+    """
+    re = jnp.where(jnp.isfinite(observed_re), observed_re, slo.target)
+    re_ema = jnp.where(state.steps == 0, re, slo.ema * re + (1.0 - slo.ema) * state.re_ema)
+    f = state.fraction
+    r = jnp.square(slo.target / jnp.maximum(re_ema, 1e-9))
+    odds = (1.0 - f) / jnp.maximum(f, 1e-6)
+    f_new = 1.0 / (1.0 + r * odds)
+    in_band = jnp.abs(re_ema - slo.target) <= slo.deadband * slo.target
+    f_new = jnp.where(in_band, f, f_new)
+    f_cap = slo.cap / jnp.maximum(window_size.astype(jnp.float32), 1.0)
+    f_new = jnp.minimum(f_new, f_cap)
+    f_new = jnp.clip(f_new, slo.min_fraction, slo.max_fraction)
+    if active is None:
+        active = jnp.ones(f.shape, bool)
+    return ControllerState(
+        fraction=jnp.where(active, f_new, state.fraction),
+        re_ema=jnp.where(active, re_ema, state.re_ema),
+        steps=state.steps + active.astype(jnp.int32),
+    )
+
+
 def fraction_for_target(
     variance_per_unit: jnp.ndarray,
     population: jnp.ndarray,

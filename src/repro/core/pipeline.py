@@ -29,8 +29,13 @@ Both modes produce identical estimates for the same sample, for every
 aggregate kind (tested).
 
 Entry points:
-  * ``execute(query, key, window, fraction)`` — the query engine; accepts a
-    ``WindowBatch`` (multi-column) or a mapping of arrays.
+  * ``execute(query, key, window, fraction)`` — the one-shot query engine;
+    accepts a ``WindowBatch`` (multi-column) or a mapping of arrays.
+  * ``session.StreamSession`` — the continuous-query engine: registered
+    QuerySets share one sampling pass per pane via plan fusion; its edge
+    half is this pipeline's ``_pass_fn`` (the same program as ``execute``
+    minus finalize).  ``run_stream`` is a thin shim over a single-query
+    session.
   * ``process_window(key, lat, lon, value, valid, fraction)`` — legacy
     single-estimate API, kept as a thin shim over the canonical
     ``SUM/MEAN(value)`` query; bit-compatible with the pre-query pipeline.
@@ -206,6 +211,7 @@ class EdgeCloudPipeline:
         self.axis_names = axis_names
         self._plans: dict[Query, Plan] = {}
         self._execs: dict[tuple[Query, bool], callable] = {}
+        self._passes: dict[tuple[Plan, bool], callable] = {}
 
     # -- declarative query API ----------------------------------------------
 
@@ -216,6 +222,23 @@ class EdgeCloudPipeline:
             p = aqp.lower(query, self.table)
             self._plans[query] = p
         return p
+
+    def _compiled(self, plan: Plan, body, out_template, sharded: bool):
+        """Jit ``body(key, lat, lon, cols, valid, fraction, axes=None)`` —
+        directly, or wrapped in shard_map over the data axes (shards = edge
+        nodes, replicated outputs shaped like ``out_template``)."""
+        if not sharded:
+            return jax.jit(body)
+        axes = self.axis_names
+        spec = P(axes)
+        mapped = _shard_map(
+            partial(body, axes=axes),
+            mesh=self.mesh,
+            in_specs=(P(), spec, spec, {c: spec for c in plan.columns}, spec, P()),
+            out_specs=jax.tree.map(lambda _: P(), out_template),
+            check_vma=False,
+        )
+        return jax.jit(mapped)
 
     def _query_fn(self, query: Query, sharded: bool):
         fn = self._execs.get((query, sharded))
@@ -237,20 +260,33 @@ class EdgeCloudPipeline:
                 comm_bytes=comm,
             )
 
-        if not sharded:
-            fn = jax.jit(run)
-        else:
-            axes = self.axis_names
-            spec = P(axes)
-            mapped = _shard_map(
-                partial(run, axes=axes),
-                mesh=self.mesh,
-                in_specs=(P(), spec, spec, {c: spec for c in plan.columns}, spec, P()),
-                out_specs=jax.tree.map(lambda _: P(), _result_template(plan)),
-                check_vma=False,
-            )
-            fn = jax.jit(mapped)
+        fn = self._compiled(plan, run, _result_template(plan), sharded)
         self._execs[(query, sharded)] = fn
+        return fn
+
+    def _pass_fn(self, plan: Plan, sharded: bool):
+        """Jitted *edge pass* for a lowered plan: stratify + EdgeSOS +
+        accumulate + consolidating collective, **without** finalize.
+
+        This is the shared half a :class:`~.session.StreamSession` runs once
+        per fusion group and per pane: the returned per-column ``ColumnStats``
+        feed any number of per-query finalizes (and pane merges) cloud-side.
+        ``execute`` is the degenerate composition pass+finalize in one
+        program.
+        """
+        fn = self._passes.get((plan, sharded))
+        if fn is not None:
+            return fn
+        table, cfg = self.table, self.config
+
+        def run(key, lat, lon, cols, valid, fraction, axes=None):
+            return _edge_program(
+                plan, table, cfg, key, lat, lon, cols, valid, fraction, axes=axes
+            )
+
+        template = ({c: ColumnStats(*(0,) * 7) for c in plan.columns}, 0, 0, 0, 0)
+        fn = self._compiled(plan, run, template, sharded)
+        self._passes[(plan, sharded)] = fn
         return fn
 
     def _window_arrays(self, window, plan: Plan):
@@ -355,47 +391,42 @@ class EdgeCloudPipeline:
     ):
         """Process a stream of WindowBatch under the QoS feedback loop.
 
-        With ``query`` set, each window is answered by ``execute`` and the
-        controller tracks the relative error of the query's first
-        *error-bounded* (sum/mean) aggregate — point-estimate kinds report
-        RE 0 and would collapse the fraction.  Grouped queries are driven
-        by the worst group with a finite RE (empty groups report inf).  A
-        query with no sum/mean aggregate keeps the fraction fixed.
+        With ``query`` set this is a thin shim over a single-query
+        :class:`~.session.StreamSession` (one registered tumbling
+        one-pane query): the controller tracks the relative error of the
+        query's first *error-bounded* (sum/mean) aggregate — point-estimate
+        kinds report RE 0 and would collapse the fraction.  Grouped queries
+        are driven by the worst group with a finite RE (empty groups report
+        inf).  A query with no sum/mean aggregate keeps the fraction fixed.
+        Register several queries on a session directly to share one
+        sampling pass across all of them.
         """
         slo = slo or feedback.SLO()
         key = key if key is not None else jax.random.key(0)
+        if query is not None:
+            from .session import StreamSession  # session sits above pipeline
+
+            sess = StreamSession(self, sharded=sharded, initial_fraction=initial_fraction)
+            reg = sess.register(query, slo=slo)
+            history = []
+            for w in windows:
+                key, sub = jax.random.split(key)
+                step = sess.step(sub, w)
+                history.append((step.results[reg.qid], step.fractions[reg.qid]))
+            return history, sess.controller_state(reg)
         state = feedback.init_state(initial_fraction)
         history = []
-        qos_spec = None
-        if query is not None:
-            qos_spec = next((a for a in query.aggs if a.kind in ("sum", "mean")), None)
-        for i, w in enumerate(windows):
+        for w in windows:
             key, sub = jax.random.split(key)
-            if query is not None:
-                fn = self.execute_sharded if sharded else self.execute
-                res = fn(query, sub, w, state.fraction)
-                if qos_spec is None:
-                    history.append((res, float(state.fraction)))
-                    continue
-                rel = res.estimates[qos_spec.key].relative_error
-                if rel.ndim:  # worst group with a finite RE drives QoS
-                    finite = jnp.isfinite(rel)
-                    # no finite group at all -> inf, which the controller
-                    # clamps to the target (holds the fraction steady)
-                    rel = jnp.where(
-                        jnp.any(finite), jnp.max(jnp.where(finite, rel, 0.0)), jnp.inf
-                    )
-            else:
-                fn = self.process_window_sharded if sharded else self.process_window
-                res = fn(
-                    sub,
-                    jnp.asarray(w.lat, jnp.float32),
-                    jnp.asarray(w.lon, jnp.float32),
-                    jnp.asarray(w.value, jnp.float32),
-                    jnp.asarray(w.valid),
-                    state.fraction,
-                )
-                rel = res.estimate.relative_error
-            state = feedback.update(state, rel, res.n_valid, slo)
+            fn = self.process_window_sharded if sharded else self.process_window
+            res = fn(
+                sub,
+                jnp.asarray(w.lat, jnp.float32),
+                jnp.asarray(w.lon, jnp.float32),
+                jnp.asarray(w.value, jnp.float32),
+                jnp.asarray(w.valid),
+                state.fraction,
+            )
+            state = feedback.update(state, res.estimate.relative_error, res.n_valid, slo)
             history.append((res, float(state.fraction)))
         return history, state

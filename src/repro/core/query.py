@@ -36,8 +36,6 @@ from __future__ import annotations
 import dataclasses
 from typing import NamedTuple
 
-import numpy as np
-
 import jax
 import jax.numpy as jnp
 
@@ -47,6 +45,7 @@ from .stratify import StratumTable
 
 KINDS = ("sum", "mean", "count", "min", "max", "var")
 GROUP_KEYS = (None, "stratum", "neighborhood")
+METHODS = ("srs", "bernoulli", "neyman")
 
 # Accumulator fields of ColumnStats each aggregate kind needs on the edge.
 # sum/mean/var carry m2 because their finalize evaluates the stratified
@@ -118,6 +117,10 @@ class Query:
         object.__setattr__(self, "aggs", aggs)
         if self.group_by not in GROUP_KEYS:
             raise ValueError(f"group_by must be one of {GROUP_KEYS}")
+        if self.method not in METHODS:
+            raise ValueError(
+                f"unknown sampling method {self.method!r}; choose from {'|'.join(METHODS)}"
+            )
         if self.mode not in ("preagg", "raw"):
             raise ValueError(f"unknown mode {self.mode!r}")
         if isinstance(self.roi, (list, tuple)):
@@ -195,6 +198,94 @@ def lower(query: Query, table: StratumTable) -> Plan:
         num_groups=num_groups,
         roi_prefix_code=prefix_code,
     )
+
+
+def fusion_key(plan: Plan) -> tuple:
+    """Hashable sampling signature of a plan.
+
+    Two plans with equal fusion keys draw *identical* sampling decisions for
+    the same PRNG key and fraction: the EdgeSOS mask depends only on the
+    stratum membership of eligible tuples (method + ROI), and the collective
+    program on the transmission mode.  Plans that agree here can share one
+    stratify+sample pass and one collective — the precondition of
+    :func:`fuse`.  Aggregates, columns, group-by, and confidence are *not*
+    part of the key; they only shape accumulation and finalize, which fuse
+    freely.
+    """
+    q = plan.query
+    return (q.method, q.mode, q.roi)
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedPlan:
+    """A set of lowered queries served by one shared edge pass.
+
+    ``shared`` is a synthetic carrier plan whose column / extrema /
+    accumulator sets are the unions over ``members``: executing its edge
+    program produces every per-stratum accumulator any member's finalize
+    reads.  Each member then carves its own estimates out of the shared
+    merged ``ColumnStats`` (``finalize(member, table, stats)``) — N queries,
+    one stratify+EdgeSOS pass, one collective.
+    """
+
+    members: tuple[Plan, ...]
+    shared: Plan
+
+    @property
+    def columns(self) -> tuple[str, ...]:
+        return self.shared.columns
+
+    @property
+    def extrema_columns(self) -> tuple[str, ...]:
+        return self.shared.extrema_columns
+
+    @property
+    def mode(self) -> str:
+        return self.shared.query.mode
+
+
+def fuse(plans) -> FusedPlan:
+    """Fuse lowered plans that share a sampling signature into one pass.
+
+    Unions the referenced columns (order-preserving across members), the
+    per-aggregate accumulator field sets, and the extrema column sets; the
+    ROI/method/mode are required to agree (:func:`fusion_key`) so the shared
+    sample is elementwise-identical to each member's independent sample —
+    callers (``StreamSession``) partition heterogeneous query sets into
+    fusable groups first.  Raises ``ValueError`` on a signature mismatch.
+    """
+    plans = tuple(plans)
+    if not plans:
+        raise ValueError("fuse needs at least one plan")
+    keys = {fusion_key(p) for p in plans}
+    if len(keys) != 1:
+        raise ValueError(
+            "cannot fuse plans with differing sampling signatures "
+            f"(method, mode, roi): {sorted(keys, key=repr)}"
+        )
+    columns = tuple(dict.fromkeys(c for p in plans for c in p.columns))
+    extrema = tuple(c for c in columns if any(c in p.extrema_columns for p in plans))
+    accs: dict[str, tuple[str, ...]] = {}
+    for p in plans:
+        for agg_key, fields in p.accumulators:
+            accs[agg_key] = tuple(dict.fromkeys(accs.get(agg_key, ()) + tuple(fields)))
+    q0 = plans[0].query
+    carrier = Query(
+        aggs=tuple(AggSpec("mean", c) for c in columns),
+        roi=q0.roi,
+        confidence=q0.confidence,
+        method=q0.method,
+        mode=q0.mode,
+    )
+    shared = Plan(
+        query=carrier,
+        columns=columns,
+        accumulators=tuple(accs.items()),
+        extrema_columns=extrema,
+        num_groups=1,
+        roi_prefix_code=plans[0].roi_prefix_code,
+    )
+    return FusedPlan(members=plans, shared=shared)
 
 
 def roi_mask(plan: Plan, table: StratumTable, lat: jnp.ndarray, lon: jnp.ndarray) -> jnp.ndarray:

@@ -1,0 +1,399 @@
+"""Continuous-query sessions: registered QuerySets over shared sampling passes.
+
+The paper's system answers *many concurrent* continuous queries over the
+same geospatial stream, each with its own SLO.  One-shot ``execute`` calls
+re-stratify and re-sample the window once per query; a
+:class:`StreamSession` amortizes that work across the whole registered
+workload (the StreamApprox / ApproxIoT observation that edge-side
+approximate analytics wins by sharing one sampling pass):
+
+  * ``register(query, slo=..., window=...)`` any number of declarative
+    :class:`~.query.Query` specs, each with an optional pane-based
+    :class:`~.windows.WindowSpec` (tumbling / sliding / hopping).
+  * Each ``step(key, pane)`` partitions the registered set into *fusion
+    groups* — queries whose plans share a sampling signature
+    (:func:`~.query.fusion_key`: method, mode, ROI) and therefore draw
+    identical sampling decisions — fuses each group
+    (:func:`~.query.fuse`), and runs **one** stratify+EdgeSOS pass and one
+    collective per group.  Per-query ``finalize`` then carves each query's
+    estimates out of the shared merged ``ColumnStats``.
+  * Sliding/hopping windows fall out of the mergeable-accumulator design:
+    the edge reduces each *pane* (stride-sized sub-window) to per-stratum
+    ``ColumnStats``; the session keeps a ring of panes per query and merges
+    them cloud-side (:func:`~.estimators.merge_column_stats_panes`) into
+    each window's answer without re-touching raw tuples.
+  * Per-query QoS runs through a vectorized feedback controller state (one
+    fraction per registered query, :func:`~.feedback.update_vector`); each
+    fusion group samples at the max fraction of its members, so every query
+    receives at least the sample its own controller asked for.
+
+Correctness contract (property-tested): with every query at the same
+fraction, a session step's estimates are elementwise-identical (same PRNG
+key) to running each query through ``pipeline.execute`` independently, in
+both ``preagg`` and ``raw`` modes — fusion changes the *cost*, never the
+answer.  With divergent per-query fractions the shared pass samples at the
+group max, so per-query error is never worse than requested.
+
+``EdgeCloudPipeline.run_stream`` is a thin shim over a single-query session.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import estimators, feedback
+from . import query as aqp
+from .feedback import SLO, ControllerState
+from .query import FusedPlan, Plan, Query, QueryResult, fuse, fusion_key
+from .windows import WindowSpec
+
+
+class _Pane(NamedTuple):
+    """One pane's contribution to a registered query's window ring."""
+
+    stats: dict  # column -> ColumnStats (this query's columns only)
+    n_sampled: jnp.ndarray
+    n_valid: jnp.ndarray
+    n_overflow: jnp.ndarray
+    n_dropped: int
+    comm_bytes: int
+
+
+@dataclasses.dataclass
+class Registration:
+    """Handle for one registered continuous query (returned by ``register``).
+
+    Carries the query's lowered plan, pane ring, and its slice of the
+    session's controller state (``fraction``/``re_ema``/``steps``).
+    ``slo=None`` means no QoS: the fraction stays fixed.
+    """
+
+    qid: int
+    query: Query
+    slo: SLO | None
+    window: WindowSpec
+    plan: Plan
+    qos_key: str | None  # agg key driving QoS; None holds the fraction
+    fraction: float
+    re_ema: float = 0.0
+    steps: int = 0
+    panes_seen: int = 0
+    ring: list = dataclasses.field(default_factory=list)
+
+    @property
+    def qos_active(self) -> bool:
+        return self.slo is not None and self.qos_key is not None
+
+
+class SessionStep(NamedTuple):
+    """Outcome of feeding one pane to the session.
+
+    results: qid -> QueryResult for queries whose window emitted this pane
+      (a query with stride s emits every s panes; others are absent).
+    fractions: qid -> post-update controller fraction, for every
+      registration.
+    comm_bytes: total edge->cloud payload of this pane's shared passes (one
+      per fusion group — the fused uplink cost of the whole QuerySet).
+    n_dropped: tuples this pane shed upstream (bounded-buffer windows).
+    pane_index: 0-based index of the pane within the session.
+    """
+
+    results: dict
+    fractions: dict
+    comm_bytes: int
+    n_dropped: int
+    pane_index: int
+
+
+class StreamSession:
+    """Continuous-query engine over an :class:`~.pipeline.EdgeCloudPipeline`.
+
+    Typical use::
+
+        sess = StreamSession(pipe)
+        speed = sess.register(Query(aggs=(AggSpec("mean", "value"),)),
+                              slo=SLO(target_relative_error=0.05))
+        occ = sess.register(Query(aggs=(AggSpec("mean", "occupancy"),)),
+                            window=WindowSpec("sliding", size=4))
+        for step in sess.run(pane_windows(stream, pane_tuples=20_000), key=key):
+            if speed.qid in step.results:
+                ...  # step.results[speed.qid].estimates["mean_value"]
+
+    All registered queries that share a sampling signature are served by one
+    stratify+EdgeSOS pass and one collective per pane.
+    """
+
+    def __init__(self, pipeline, *, sharded: bool = False, initial_fraction: float = 0.8):
+        self.pipe = pipeline
+        self.sharded = sharded
+        self.initial_fraction = float(initial_fraction)
+        self.pane_index = 0
+        self.total_comm_bytes = 0
+        self.total_dropped = 0
+        self._regs: dict[int, Registration] = {}
+        self._next_qid = 0
+        self._fused: dict[tuple[Query, ...], FusedPlan] = {}
+        self._finalizers: dict[tuple[Query, int], callable] = {}
+        self._slo_stack: feedback.StackedSLO | None = None
+        self._slo_sig: tuple | None = None
+
+    # -- registration --------------------------------------------------------
+
+    def register(
+        self,
+        query: Query,
+        *,
+        slo: SLO | None = None,
+        window: WindowSpec | None = None,
+        initial_fraction: float | None = None,
+    ) -> Registration:
+        """Register a continuous query; returns its handle.
+
+        ``slo=None`` disables QoS for this query (fixed fraction).  The
+        query joins the session's fusion groups from the next ``step``.
+        """
+        window = window or WindowSpec()
+        plan = self.pipe.plan(query)
+        qos_key = next((a.key for a in query.aggs if a.kind in ("sum", "mean")), None)
+        reg = Registration(
+            qid=self._next_qid,
+            query=query,
+            slo=slo,
+            window=window,
+            plan=plan,
+            qos_key=qos_key,
+            fraction=float(initial_fraction if initial_fraction is not None else self.initial_fraction),
+        )
+        self._next_qid += 1
+        self._regs[reg.qid] = reg
+        return reg
+
+    def unregister(self, reg: Registration) -> None:
+        """Drop a registered query (its pane ring is discarded)."""
+        self._regs.pop(reg.qid, None)
+
+    @property
+    def registrations(self) -> tuple[Registration, ...]:
+        return tuple(self._regs.values())
+
+    def controller_state(self, reg: Registration) -> ControllerState:
+        """This registration's slice of the vectorized controller state."""
+        return ControllerState(
+            fraction=jnp.float32(reg.fraction),
+            re_ema=jnp.float32(reg.re_ema),
+            steps=jnp.int32(reg.steps),
+        )
+
+    # -- fusion machinery ----------------------------------------------------
+
+    def _groups(self) -> list[list[Registration]]:
+        """Partition registrations into fusable groups (signature equality),
+        preserving registration order within and across groups."""
+        groups: dict[tuple, list[Registration]] = {}
+        for reg in self._regs.values():
+            groups.setdefault(fusion_key(reg.plan), []).append(reg)
+        return list(groups.values())
+
+    def _fused_plan(self, members: list[Registration]) -> FusedPlan:
+        sig = tuple(r.query for r in members)
+        fused = self._fused.get(sig)
+        if fused is None:
+            fused = fuse([r.plan for r in members])
+            self._fused[sig] = fused
+        return fused
+
+    def _analytic_comm(self, fused: FusedPlan, n_rows: int) -> int:
+        """Per-shard uplink bytes of one shared pass, computed host-side.
+
+        Mirrors ``_edge_program``'s analytic accounting (it is a static
+        property of the plan, not of the data) so the hot loop never blocks
+        on the device just to read back a constant.
+        """
+        plan = fused.shared
+        if plan.query.mode == "raw":
+            cap = self.pipe.config.raw_capacity
+            if cap is None:
+                shards = 1
+                if self.sharded:
+                    shape = self.pipe.mesh.shape
+                    shards = math.prod(shape[a] for a in self.pipe.axis_names)
+                cap = n_rows // shards
+            return aqp.raw_bytes(plan, cap)
+        return aqp.preagg_bytes(plan, self.pipe.table.num_slots)
+
+    def _finalize_fn(self, reg: Registration, num_panes: int):
+        """Jitted cloud-side emit: merge ``num_panes`` pane accumulators
+        (vectorized pane-merge; pass-through when the window is one pane,
+        preserving bit-compatibility with ``execute``) and finalize."""
+        key = (reg.query, num_panes)
+        fn = self._finalizers.get(key)
+        if fn is not None:
+            return fn
+        plan, table = reg.plan, self.pipe.table
+
+        if num_panes == 1:
+
+            def run(stats):
+                return aqp.finalize(plan, table, stats), stats
+
+        else:
+
+            def run(stacked):
+                merged = {
+                    c: estimators.merge_column_stats_panes(stacked[c]) for c in plan.columns
+                }
+                return aqp.finalize(plan, table, merged), merged
+
+        fn = jax.jit(run)
+        self._finalizers[key] = fn
+        return fn
+
+    def _emit(self, reg: Registration) -> QueryResult:
+        """Assemble this query's window from its pane ring and finalize."""
+        panes = reg.ring
+        if len(panes) == 1:
+            estimates, stats = self._finalize_fn(reg, 1)(panes[0].stats)
+        else:
+            stacked = {
+                c: estimators.stack_column_stats([p.stats[c] for p in panes])
+                for c in reg.plan.columns
+            }
+            estimates, stats = self._finalize_fn(reg, len(panes))(stacked)
+        n_sampled = panes[0].n_sampled
+        n_valid = panes[0].n_valid
+        n_overflow = panes[0].n_overflow
+        for p in panes[1:]:
+            n_sampled = n_sampled + p.n_sampled
+            n_valid = n_valid + p.n_valid
+            n_overflow = n_overflow + p.n_overflow
+        return QueryResult(
+            estimates=estimates,
+            stats=stats,
+            n_sampled=n_sampled,
+            n_valid=n_valid,
+            n_overflow=n_overflow,
+            # uplink spent on this window's span: one shared pass per pane
+            comm_bytes=jnp.int32(sum(p.comm_bytes for p in panes)),
+        )
+
+    # -- the continuous loop -------------------------------------------------
+
+    def step(self, key, pane) -> SessionStep:
+        """Feed one pane through every fusion group and emit due windows.
+
+        Every group's shared pass uses ``key`` directly (not folded), so a
+        single-group session reproduces ``execute(query, key, ...)`` exactly.
+        """
+        if not self._regs:
+            raise ValueError("step() on a session with no registered queries")
+        n_dropped = int(getattr(pane, "n_dropped", 0))
+        emitted: dict[int, QueryResult] = {}
+        comm_total = 0
+        for members in self._groups():
+            fused = self._fused_plan(members)
+            fraction = max(r.fraction for r in members)
+            lat, lon, cols, valid = self.pipe._window_arrays(pane, fused.shared)
+            fn = self.pipe._pass_fn(fused.shared, self.sharded)
+            stats, n_sampled, n_valid, n_overflow, _ = fn(
+                key, lat, lon, cols, valid, jnp.float32(fraction)
+            )
+            # analytic, host-side: avoid syncing on the device pass here
+            comm = self._analytic_comm(fused, lat.shape[0])
+            comm_total += comm
+            for reg in members:
+                reg.ring.append(
+                    _Pane(
+                        stats={c: stats[c] for c in reg.plan.columns},
+                        n_sampled=n_sampled,
+                        n_valid=n_valid,
+                        n_overflow=n_overflow,
+                        n_dropped=n_dropped,
+                        comm_bytes=comm,
+                    )
+                )
+                del reg.ring[: -reg.window.size]
+                reg.panes_seen += 1
+                if reg.panes_seen % reg.window.stride == 0:
+                    emitted[reg.qid] = self._emit(reg)
+        self._update_controllers(emitted)
+        self.pane_index += 1
+        self.total_comm_bytes += comm_total
+        self.total_dropped += n_dropped
+        return SessionStep(
+            results=emitted,
+            fractions={r.qid: r.fraction for r in self._regs.values()},
+            comm_bytes=comm_total,
+            n_dropped=n_dropped,
+            pane_index=self.pane_index - 1,
+        )
+
+    def run(self, panes, key=None) -> list[SessionStep]:
+        """Drive the session over an iterator of panes (one key per pane)."""
+        key = key if key is not None else jax.random.key(0)
+        history = []
+        for pane in panes:
+            key, sub = jax.random.split(key)
+            history.append(self.step(sub, pane))
+        return history
+
+    # -- vectorized QoS ------------------------------------------------------
+
+    def _stacked_slos(self, regs: list[Registration]) -> feedback.StackedSLO:
+        sig = tuple((r.qid, r.slo) for r in regs)
+        if sig != self._slo_sig:
+            self._slo_stack = feedback.stack_slos([r.slo or SLO() for r in regs])
+            self._slo_sig = sig
+        return self._slo_stack
+
+    @staticmethod
+    def _observed_re(reg: Registration, res: QueryResult) -> jnp.ndarray:
+        """The scalar RE driving this query's controller entry: its first
+        error-bounded aggregate; grouped queries report the worst group with
+        a finite RE (all-empty groups -> inf, which holds the fraction)."""
+        rel = jnp.asarray(res.estimates[reg.qos_key].relative_error)
+        if rel.ndim:
+            finite = jnp.isfinite(rel)
+            rel = jnp.where(jnp.any(finite), jnp.max(jnp.where(finite, rel, 0.0)), jnp.inf)
+        return rel
+
+    def _update_controllers(self, emitted: dict[int, QueryResult]) -> None:
+        """One vectorized controller step over all registrations; only
+        queries that emitted an error-bounded result this pane advance."""
+        regs = list(self._regs.values())
+        active = [r.qos_active and r.qid in emitted for r in regs]
+        if not any(active):
+            return
+        state = ControllerState(
+            fraction=jnp.asarray([r.fraction for r in regs], jnp.float32),
+            re_ema=jnp.asarray([r.re_ema for r in regs], jnp.float32),
+            steps=jnp.asarray([r.steps for r in regs], jnp.int32),
+        )
+        re_obs = jnp.stack(
+            [
+                self._observed_re(r, emitted[r.qid]).astype(jnp.float32)
+                if on
+                else jnp.float32(0.0)
+                for r, on in zip(regs, active)
+            ]
+        )
+        n_valid = jnp.stack(
+            [
+                emitted[r.qid].n_valid.astype(jnp.float32) if on else jnp.float32(1.0)
+                for r, on in zip(regs, active)
+            ]
+        )
+        new = feedback.update_vector(
+            state, re_obs, n_valid, self._stacked_slos(regs), jnp.asarray(active)
+        )
+        frac = jax.device_get(new.fraction)
+        ema = jax.device_get(new.re_ema)
+        for i, reg in enumerate(regs):
+            if active[i]:
+                reg.fraction = float(frac[i])
+                reg.re_ema = float(ema[i])
+                reg.steps += 1

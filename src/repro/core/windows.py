@@ -7,6 +7,15 @@ host-side iterators yielding fixed-shape arrays (count windows) or padded
 arrays with a validity mask (time windows), so every device step is a single
 compiled program.
 
+Sliding and hopping windows are *pane-based* (the classic panes / stream
+"slicing" decomposition): the stream is cut into stride-sized sub-windows
+("panes"), each pane is reduced once to mergeable per-stratum accumulators,
+and a window's answer is the merge of its panes — no tuple is ever touched
+twice.  :class:`WindowSpec` declares the shape of a registered continuous
+query's window in pane units; the pane *content* is whatever the tumbling
+iterators below yield (see :func:`pane_windows`), and the merge lives in
+``session.StreamSession`` / ``estimators.merge_column_stats_panes``.
+
 Windows carry *multiple named value columns* for the query layer: stream
 chunks may include any number of extra numeric keys beyond the canonical
 ``sensor_id/timestamp/lat/lon/value`` (e.g. mobility speed + occupancy, air
@@ -23,10 +32,62 @@ import numpy as np
 
 CANONICAL_KEYS = ("sensor_id", "timestamp", "lat", "lon", "value")
 
+WINDOW_KINDS = ("tumbling", "sliding", "hopping")
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowSpec:
+    """Pane-based window shape of a registered continuous query.
+
+    ``size`` and ``stride`` are measured in *panes* — the unit batches a
+    :class:`~.session.StreamSession` consumes (one ``WindowBatch`` per
+    ``step``).  A query's window covers the last ``size`` panes and a result
+    is emitted every ``stride`` panes:
+
+      tumbling  stride == size (consecutive disjoint windows; the default,
+                ``WindowSpec()`` is the classic one-pane tumbling window)
+      sliding   stride == 1 (a result after every pane, windows overlap)
+      hopping   1 <= stride <= size (general overlapping hop)
+
+    ``stride`` may be omitted: it defaults to ``size`` for tumbling and to
+    ``1`` for sliding; hopping requires it explicitly.
+    """
+
+    kind: str = "tumbling"
+    size: int = 1
+    stride: int | None = None
+
+    def __post_init__(self):
+        if self.kind not in WINDOW_KINDS:
+            raise ValueError(f"window kind must be one of {WINDOW_KINDS}; got {self.kind!r}")
+        if int(self.size) < 1:
+            raise ValueError(f"window size must be >= 1 pane; got {self.size}")
+        object.__setattr__(self, "size", int(self.size))
+        stride = self.stride
+        if stride is None:
+            if self.kind == "hopping":
+                raise ValueError("hopping WindowSpec requires an explicit stride")
+            stride = self.size if self.kind == "tumbling" else 1
+        stride = int(stride)
+        if self.kind == "tumbling" and stride != self.size:
+            raise ValueError(f"tumbling windows need stride == size; got {stride} != {self.size}")
+        if self.kind == "sliding" and stride != 1:
+            raise ValueError(f"sliding windows need stride == 1; got {stride}")
+        if not 1 <= stride <= self.size:
+            raise ValueError(
+                f"stride must be in [1, size={self.size}] (stride > size would skip panes); got {stride}"
+            )
+        object.__setattr__(self, "stride", stride)
+
 
 @dataclasses.dataclass(frozen=True)
 class WindowBatch:
-    """One window of tuples, fixed shape (N,) + validity mask."""
+    """One window (or pane) of tuples, fixed shape (N,) + validity mask.
+
+    ``n_dropped`` counts tuples that arrived for this window but were shed
+    because the static capacity was exceeded (bounded-buffer semantics of
+    :func:`time_windows`); always 0 for count-triggered windows.
+    """
 
     sensor_id: np.ndarray
     timestamp: np.ndarray
@@ -35,6 +96,7 @@ class WindowBatch:
     value: np.ndarray
     valid: np.ndarray
     extra: dict = dataclasses.field(default_factory=dict)
+    n_dropped: int = 0
 
     @property
     def size(self) -> int:
@@ -56,7 +118,9 @@ def _pad(arr: np.ndarray, capacity: int) -> np.ndarray:
     return out
 
 
-def _make_batch(cat: dict, valid: np.ndarray, pad_to: int | None = None) -> WindowBatch:
+def _make_batch(
+    cat: dict, valid: np.ndarray, pad_to: int | None = None, n_dropped: int = 0
+) -> WindowBatch:
     def col(k):
         a = cat[k]
         return _pad(a, pad_to) if pad_to is not None else a
@@ -70,6 +134,7 @@ def _make_batch(cat: dict, valid: np.ndarray, pad_to: int | None = None) -> Wind
         value=col("value"),
         valid=valid,
         extra=extra,
+        n_dropped=n_dropped,
     )
 
 
@@ -115,8 +180,10 @@ def time_windows(
 ) -> Iterator[WindowBatch]:
     """Time-triggered tumbling windows padded to a static ``capacity``.
 
-    Tuples beyond capacity are dropped with a warning count (bounded-buffer
-    semantics, like the paper's Kafka producer under burst).
+    Tuples beyond capacity are dropped (bounded-buffer semantics, like the
+    paper's Kafka producer under burst) and counted: each emitted batch's
+    ``n_dropped`` is the number its window shed, so downstream diagnostics
+    (e.g. ``StreamSession`` step reports) can account for the loss.
     """
     buf: dict[str, list] | None = None
     t_edge: float | None = None
@@ -135,7 +202,10 @@ def time_windows(
             cat = {k: np.concatenate(v) if v else np.zeros(0) for k, v in buf.items()}
             size = min(len(cat["lat"]), capacity)
             head = {k: v[:size] for k, v in cat.items()}
-            yield _make_batch(head, np.arange(capacity) < size, pad_to=capacity)
+            yield _make_batch(
+                head, np.arange(capacity) < size, pad_to=capacity,
+                n_dropped=len(cat["lat"]) - size,
+            )
             for k in buf:
                 buf[k] = []
             lo = cut
@@ -149,4 +219,31 @@ def time_windows(
         size = min(len(cat["lat"]), capacity)
         if size:
             head = {k: v[:size] for k, v in cat.items()}
-            yield _make_batch(head, np.arange(capacity) < size, pad_to=capacity)
+            yield _make_batch(
+                head, np.arange(capacity) < size, pad_to=capacity,
+                n_dropped=len(cat["lat"]) - size,
+            )
+
+
+def pane_windows(
+    stream: Iterator[dict],
+    pane_tuples: int | None = None,
+    pane_seconds: float | None = None,
+    capacity: int | None = None,
+) -> Iterator[WindowBatch]:
+    """Cut a stream into panes — the arrival unit of a ``StreamSession``.
+
+    A pane is just a tumbling window of one *stride* worth of data: pass
+    either ``pane_tuples`` (count trigger, fixed-shape panes) or
+    ``pane_seconds`` + ``capacity`` (time trigger, padded panes).  Feed the
+    resulting iterator to ``StreamSession.run``; registered queries with
+    sliding/hopping :class:`WindowSpec` assemble their windows by merging
+    pane accumulators, never re-reading these tuples.
+    """
+    if (pane_tuples is None) == (pane_seconds is None):
+        raise ValueError("pass exactly one of pane_tuples / pane_seconds")
+    if pane_tuples is not None:
+        return count_windows(stream, pane_tuples)
+    if capacity is None:
+        raise ValueError("time-triggered panes need a static capacity")
+    return time_windows(stream, pane_seconds, capacity)

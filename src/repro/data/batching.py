@@ -10,8 +10,6 @@ error-bound telemetry (eqs 5-10).
 
 from __future__ import annotations
 
-import numpy as np
-
 import jax
 import jax.numpy as jnp
 

@@ -14,7 +14,6 @@ Sharding of serving state uses a divisibility-aware heuristic:
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any
 
 import jax

@@ -9,7 +9,7 @@ the dry-run materializes specs as ShapeDtypeStructs without allocation.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,7 @@ KV cache plus per-layer cross K/V computed once from the encoder output.
 
 from __future__ import annotations
 
-from typing import Any, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

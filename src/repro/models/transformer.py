@@ -17,7 +17,6 @@ Structure notes:
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, NamedTuple
 
 import jax

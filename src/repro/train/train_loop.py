@@ -15,7 +15,6 @@ fraction during training.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

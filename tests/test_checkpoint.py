@@ -3,13 +3,12 @@
 import os
 
 import numpy as np
-import pytest
 
 import jax
 import jax.numpy as jnp
 
 from repro.train.checkpoint import CheckpointManager
-from repro.train.optimizer import TrainState, adamw_init
+from repro.train.optimizer import adamw_init
 
 
 def _state(seed=0):

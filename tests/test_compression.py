@@ -1,7 +1,6 @@
 """Gradient compression: unbiasedness + error feedback + convergence."""
 
 import numpy as np
-import pytest
 
 import jax
 import jax.numpy as jnp

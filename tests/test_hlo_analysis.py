@@ -1,6 +1,5 @@
 """HLO cost analyzer: FLOPs/bytes vs XLA on unrolled modules, loop scaling."""
 
-import numpy as np
 import pytest
 
 import jax

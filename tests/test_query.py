@@ -17,12 +17,11 @@ from repro.core import (
     geohash,
     lower,
     make_table,
-    sampling,
     windows,
 )
 from repro.core.pipeline import _zero_overflow
 from repro.core.query import ACCUMULATOR_FIELDS, KINDS
-from repro.data.streams import materialize, shenzhen_taxi_stream
+from repro.data.streams import shenzhen_taxi_stream
 
 
 @pytest.fixture(scope="module")

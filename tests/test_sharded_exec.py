@@ -5,8 +5,6 @@ import os
 import subprocess
 import sys
 
-import pytest
-
 
 def _run(code: str, timeout=900):
     r = subprocess.run(

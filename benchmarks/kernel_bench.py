@@ -12,6 +12,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.edge_reduce import edge_reduce
+from repro.kernels.edge_reduce.ref import edge_reduce_percol, edge_reduce_ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.geohash import geohash_encode
@@ -52,6 +54,24 @@ def run():
     ok = bool(jnp.all(gm == rm)) and bool(jnp.allclose(gw, rw, rtol=1e-5))
     lines.append(csv_line("kernel_sample_mask_ref", ref_us, f"n={n};match={ok}"))
 
+    # fused multi-column edge reduce: one pass for a whole fusion group's
+    # moment rows vs the per-column segment baseline (3·C reductions)
+    for c in (4, 8):
+        cols = jnp.asarray(rng.normal(10, 3, (c, n)), jnp.float32)
+        fused = jax.jit(lambda s, v, m: edge_reduce(s, v, m, 1000))
+        percol = jax.jit(lambda s, v, m: edge_reduce_percol(s, v, m, 1000))
+        fused_us = time_call(fused, sidx, cols, mask)
+        percol_us = time_call(percol, sidx, cols, mask)
+        g = edge_reduce(sidx, cols, mask, 1000)
+        r = edge_reduce_ref(sidx, cols, mask, 1000)
+        ok = all(bool(jnp.allclose(a, b, rtol=1e-5, atol=1e-2)) for a, b in zip(g, r))
+        lines.append(csv_line(
+            f"kernel_edge_reduce_fused_c{c}", fused_us,
+            f"n={n};strata=1000;cols={c};allclose={ok};backend={jax.default_backend()}"))
+        lines.append(csv_line(
+            f"kernel_edge_reduce_percol_c{c}", percol_us,
+            f"n={n};strata=1000;cols={c};fused_speedup={percol_us / max(fused_us, 1e-9):.2f}x"))
+
     B, S, H, K, dh = 1, 512, 8, 2, 64
     q = jnp.asarray(rng.normal(0, 1, (B, S, H, dh)), jnp.bfloat16)
     k = jnp.asarray(rng.normal(0, 1, (B, S, K, dh)), jnp.bfloat16)
@@ -63,3 +83,48 @@ def run():
     lines.append(csv_line("kernel_flash_attention_ref", ref_us,
                           f"S={S};H={H};K={K};max_err={err:.4f};backend={jax.default_backend()}"))
     return lines
+
+
+def main() -> None:
+    """Standalone entry (CI smoke): ``python -m benchmarks.kernel_bench [--dry]``.
+
+    ``--dry`` runs every kernel once on tiny shapes (interpret-mode parity
+    included off-TPU) without the timing loops.
+    """
+    import sys
+
+    print("name,us_per_call,derived")
+    if "--dry" in sys.argv[1:]:
+        rng = np.random.default_rng(0)
+        n, s, c = 300, 20, 3
+        sidx = jnp.asarray(rng.integers(0, s, n), jnp.int32)
+        vals = jnp.asarray(rng.normal(0, 1, (c, n)), jnp.float32)
+        mask = jnp.asarray(rng.random(n) < 0.5)
+        checks = {
+            "geohash": bool(jnp.all(
+                geohash_encode(vals[0, :64], vals[1, :64], 5)
+                == encode_ref(vals[0, :64], vals[1, :64], 5))),
+            "stratified_stats": all(bool(jnp.allclose(a, b, rtol=1e-4, atol=1e-2)) for a, b in zip(
+                stratified_stats(sidx, vals[0], mask, s),
+                stratified_stats_ref(sidx, vals[0], mask, s))),
+            # interpret=True forces the Pallas kernel (auto mode would lower
+            # to the oracle itself off-TPU, making the check tautological)
+            "edge_reduce": all(bool(jnp.allclose(a, b, rtol=1e-4, atol=1e-2)) for a, b in zip(
+                edge_reduce(sidx, vals, mask, s, interpret=True),
+                edge_reduce_ref(sidx, vals, mask, s))),
+            "sample_mask": bool(jnp.all(
+                sample_mask(sidx, jnp.abs(vals[1]) % 1.0, jnp.full((s,), 0.5))[0]
+                == sample_mask_ref(sidx, jnp.abs(vals[1]) % 1.0, jnp.full((s,), 0.5))[0])),
+        }
+        bad = [k for k, ok in checks.items() if not ok]
+        for k, ok in checks.items():
+            print(f"kernel_bench/{k},0,{'DRY-OK' if ok else 'DRY-MISMATCH'}")
+        if bad:
+            raise SystemExit(f"kernel dry-run parity failed: {bad}")
+        return
+    for line in run():
+        print(line, flush=True)
+
+
+if __name__ == "__main__":
+    main()

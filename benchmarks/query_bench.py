@@ -3,10 +3,13 @@
 Measures per-window device latency of (a) the legacy `process_window`
 single SUM/MEAN path, (b) a 3-aggregate neighborhood-grouped declarative
 query, (c) the same query ungrouped — the cost of the API redesign's
-generality on the hot path — and (d) the headline of the session redesign:
+generality on the hot path — (d) the headline of the session redesign:
 a fused `StreamSession` answering N registered queries with ONE
 stratify+EdgeSOS pass vs N independent `execute` calls, for
-N ∈ {1, 4, 16}, in wall time and edge->cloud collective bytes.
+N ∈ {1, 4, 16}, in wall time and edge->cloud collective bytes — and
+(e) the edge-reduce backend on a wide fusion group: the single-pass
+multi-column reduction (`backend="pallas"`) vs the per-column segment
+path, for 4- and 8-column groups, plus the quantile-sketch query cost.
 """
 
 from __future__ import annotations
@@ -105,3 +108,38 @@ def run():
             f"fused_speedup={us_indep / max(us_fused, 1e-9):.2f}x;"
             f"bytes_ratio={indep_bytes / max(fused_bytes, 1):.2f}x",
         )
+
+    # wide fusion groups: single-pass multi-column edge reduction vs the
+    # per-column segment path (same plan, same sample, different backend)
+    import numpy as np
+
+    rng = np.random.default_rng(1)
+    extras = ("speed", "heading", "accel", "altitude", "battery", "signal")
+    wide = dict(win)
+    for extra in extras:
+        wide[extra] = jnp.asarray(rng.normal(30, 10, WINDOW), jnp.float32)
+    for ncols in (4, 8):
+        cols = (["value", "occupancy"] + list(extras))[:ncols]
+        q_wide = Query(aggs=tuple(AggSpec("mean", c) for c in cols))
+        backends = {}
+        for backend in ("segment", "pallas"):
+            p = EdgeCloudPipeline(table, PipelineConfig(backend=backend))
+            backends[backend] = time_call(p.execute, q_wide, key, wide, FRACTION)
+        yield csv_line(
+            f"query_bench/edge_reduce_fused_c{ncols}", backends["pallas"],
+            f"window={WINDOW};cols={ncols};"
+            f"vs_percol={backends['segment'] / max(backends['pallas'], 1e-9):.2f}x",
+        )
+        yield csv_line(
+            f"query_bench/edge_reduce_percol_c{ncols}", backends["segment"],
+            f"window={WINDOW};cols={ncols}",
+        )
+
+    # quantile aggregates: the sketch's accumulate+finalize cost on top of
+    # the same pass (p50/p99 over one column)
+    q_quant = Query(aggs=(AggSpec("mean", "value"), AggSpec("p50", "value"), AggSpec("p99", "value")))
+    us_quant = time_call(pipe.execute, q_quant, key, win, FRACTION)
+    yield csv_line(
+        "query_bench/quantile_p50_p99", us_quant,
+        f"window={WINDOW};vs_query3={us_quant / max(us, 1e-9):.2f}x",
+    )

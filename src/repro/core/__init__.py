@@ -43,17 +43,27 @@ shim over the canonical ``SUM/MEAN(value)`` query.
 
 from . import estimators, feedback, geohash, query, routing, sampling, session, stratify, windows
 from .estimators import (
+    Accumulator,
     ColumnStats,
     Estimate,
+    Extrema,
+    QuantileSketch,
     StratumStats,
+    accumulate_column,
+    accumulator,
     column_stats,
     estimate,
+    merge_accs,
+    merge_accs_panes,
     merge_column_stats,
     merge_column_stats_panes,
     merge_stats,
+    psum_accs,
     psum_column_stats,
     psum_stats,
+    register_accumulator,
     sample_stats,
+    sketch_quantile,
 )
 from .feedback import SLO, ControllerState, StackedSLO
 from .pipeline import EdgeCloudPipeline, PipelineConfig, WindowResult, edge_sample
@@ -65,10 +75,13 @@ from .stratify import CHICAGO_BBOX, SHENZHEN_BBOX, StratumTable, make_table, mak
 from .windows import WindowBatch, WindowSpec, pane_windows
 
 __all__ = [
+    "Accumulator",
     "AggEstimate",
     "AggSpec",
     "CHICAGO_BBOX",
     "ColumnStats",
+    "Extrema",
+    "QuantileSketch",
     "ControllerState",
     "EdgeCloudPipeline",
     "Estimate",
@@ -90,6 +103,8 @@ __all__ = [
     "WindowBatch",
     "WindowResult",
     "WindowSpec",
+    "accumulate_column",
+    "accumulator",
     "balanced_plan",
     "column_stats",
     "compact",
@@ -105,12 +120,17 @@ __all__ = [
     "lower",
     "make_table",
     "make_table_from_codes",
+    "merge_accs",
+    "merge_accs_panes",
     "merge_column_stats",
     "merge_column_stats_panes",
     "merge_stats",
     "pane_windows",
+    "psum_accs",
     "psum_column_stats",
     "psum_stats",
+    "register_accumulator",
+    "sketch_quantile",
     "query",
     "routing",
     "sample_stats",

@@ -5,6 +5,23 @@ stratified SUM/MEAN estimators, the variance of those estimators with
 finite-population correction, and normal-approximation confidence
 intervals / margin of error / relative error.
 
+This module also hosts the **accumulator registry** — the pluggable layer
+the query engine reduces windows into.  An :class:`Accumulator` is a named
+kind of mergeable per-stratum summary (``accumulate / merge / merge_panes /
+psum / zero_overflow``); the built-in citizens are
+
+  * ``moments``  — the eq 4 sample moments (:class:`StratumStats`), exact
+    Chan-et-al. merges; backs sum/mean/count/var,
+  * ``extrema``  — per-stratum min/max lattices; backs min/max,
+  * ``sketch``   — a mergeable fixed-size log-domain quantile histogram
+    (DDSketch-style); backs the ``p50``/``p99`` quantile aggregates.
+
+Each column a query references carries a *dict of accumulator states*
+(``{"moments": ..., "extrema": ...}``) chosen by plan lowering; the dict is
+a plain pytree, so it jits, shard_maps, stacks into pane rings, and crosses
+collectives untouched.  New aggregate families plug in by registering an
+accumulator kind — no pipeline/session/collective code changes.
+
 Two aggregation modes mirror the paper's two edge->cloud transmission modes:
 
   * raw mode — the "cloud" groups raw sampled tuples by stratum and applies
@@ -151,6 +168,42 @@ def psum_stats(stats: StratumStats, axis_names) -> StratumStats:
     return StratumStats(n=n, total=total, wsum=wsum, m2=m2, mean=mean)
 
 
+def merge_stats_panes(stacked: StratumStats) -> StratumStats:
+    """Vectorized multi-way moment merge over a leading pane axis.
+
+    Input fields are (P, S+1): P pane accumulators of the same stratum
+    table.  One mean-shift pass merges all panes at once —
+        M2 = Σ_p (M2_p + n_p ȳ_p²) − n ȳ²
+    (the :func:`psum_stats` decomposition applied on a local axis) — instead
+    of P−1 sequential :func:`merge_stats` folds.
+    """
+    n = jnp.sum(stacked.n, axis=0)
+    total = jnp.sum(stacked.total, axis=0)
+    wsum = jnp.sum(stacked.wsum, axis=0)
+    raw2 = jnp.sum(stacked.m2 + stacked.n * stacked.mean * stacked.mean, axis=0)
+    mean = jnp.where(n > 0, wsum / jnp.maximum(n, 1.0), 0.0)
+    m2 = jnp.maximum(raw2 - n * mean * mean, 0.0)
+    return StratumStats(n=n, total=total, wsum=wsum, m2=m2, mean=mean)
+
+
+def stats_from_raw_moments(
+    count: jnp.ndarray, s1: jnp.ndarray, s2: jnp.ndarray, counts: jnp.ndarray
+) -> StratumStats:
+    """Raw per-stratum sums {n, Σy, Σy²} -> the centered StratumStats form.
+
+    This is the adapter between the fused edge-reduce kernel (which emits
+    raw power sums — the matmul-friendly form) and the mean-shift moment
+    representation the estimators consume.  The centering ``m2 = Σy² − nȳ²``
+    is the one fp32-cancellation step of the kernel path; the segment-ops
+    backend centers two-pass and is the parity oracle (documented tolerance
+    in the backend parity suite).
+    """
+    n = count.astype(jnp.float32)
+    mean = jnp.where(n > 0, s1 / jnp.maximum(n, 1.0), 0.0)
+    m2 = jnp.maximum(s2 - n * mean * mean, 0.0)
+    return StratumStats(n=n, total=counts.astype(jnp.float32), wsum=s1, m2=m2, mean=mean)
+
+
 def zero_overflow_stats(stats: StratumStats) -> StratumStats:
     """Neutralize the overflow slot (additive fields -> 0) so it drops out
     of estimation; the canonical implementation shared by pipeline shims
@@ -180,20 +233,14 @@ def column_stats(
     filled with their identities without running the segment reductions.
     """
     base = sample_stats(values, stratum_idx, mask, num_slots, counts=counts)
-    if extrema:
-        v = values.astype(jnp.float32)
-        vmin = jax.ops.segment_min(
-            jnp.where(mask, v, jnp.inf), stratum_idx, num_segments=num_slots
-        )
-        vmax = jax.ops.segment_max(
-            jnp.where(mask, v, -jnp.inf), stratum_idx, num_segments=num_slots
-        )
-    else:
-        vmin = jnp.full((num_slots,), jnp.inf, jnp.float32)
-        vmax = jnp.full((num_slots,), -jnp.inf, jnp.float32)
+    ext = (
+        EXTREMA.accumulate(values, stratum_idx, mask, num_slots)
+        if extrema
+        else EXTREMA.identity(num_slots)
+    )
     return ColumnStats(
         n=base.n, total=base.total, wsum=base.wsum, m2=base.m2, mean=base.mean,
-        min=vmin, max=vmax,
+        min=ext.min, max=ext.max,
     )
 
 
@@ -222,21 +269,14 @@ def merge_column_stats_panes(stacked: ColumnStats) -> ColumnStats:
     """Vectorized multi-way merge over a leading pane axis.
 
     Input fields are (P, S+1): P pane accumulators of the same stratum
-    table.  One mean-shift pass merges all panes at once —
-        M2 = Σ_p (M2_p + n_p ȳ_p²) − n ȳ²
-    (the :func:`psum_stats` decomposition applied on a local axis) — instead
+    table, merged in one mean-shift pass (:func:`merge_stats_panes`) instead
     of P−1 sequential :func:`merge_column_stats` folds.  This is the
     cloud-side pane merge of sliding/hopping windows: a window's answer is
     assembled from its panes' accumulators without re-touching raw tuples.
     """
-    n = jnp.sum(stacked.n, axis=0)
-    total = jnp.sum(stacked.total, axis=0)
-    wsum = jnp.sum(stacked.wsum, axis=0)
-    raw2 = jnp.sum(stacked.m2 + stacked.n * stacked.mean * stacked.mean, axis=0)
-    mean = jnp.where(n > 0, wsum / jnp.maximum(n, 1.0), 0.0)
-    m2 = jnp.maximum(raw2 - n * mean * mean, 0.0)
+    base = merge_stats_panes(stacked.base)
     return ColumnStats(
-        n=n, total=total, wsum=wsum, m2=m2, mean=mean,
+        n=base.n, total=base.total, wsum=base.wsum, m2=base.m2, mean=base.mean,
         min=jnp.min(stacked.min, axis=0), max=jnp.max(stacked.max, axis=0),
     )
 
@@ -255,17 +295,9 @@ def psum_column_stats(
     ``extrema=False`` skips the pmin/pmax collectives for columns no min/max
     aggregate reads (the identity-filled fields pass through unchanged).
     """
-    if shared is None:
-        base = psum_stats(stats.base, axis_names)
-        n, total, wsum, m2, mean = base
-    else:
-        n, total = shared.n, shared.total
-        wsum = jax.lax.psum(stats.wsum, axis_names)
-        raw2 = jax.lax.psum(stats.m2 + stats.n * stats.mean * stats.mean, axis_names)
-        mean = jnp.where(n > 0, wsum / jnp.maximum(n, 1.0), 0.0)
-        m2 = jnp.maximum(raw2 - n * mean * mean, 0.0)
+    base = MOMENTS.psum(stats.base, axis_names, shared=shared.base if shared is not None else None)
     return ColumnStats(
-        n=n, total=total, wsum=wsum, m2=m2, mean=mean,
+        n=base.n, total=base.total, wsum=base.wsum, m2=base.m2, mean=base.mean,
         min=jax.lax.pmin(stats.min, axis_names) if extrema else stats.min,
         max=jax.lax.pmax(stats.max, axis_names) if extrema else stats.max,
     )
@@ -343,3 +375,297 @@ def weighted_estimate(
     """Horvitz-Thompson mean from (value, weight) pairs — one-liner used by
     the LM training integration (weights from SampleResult)."""
     return jnp.sum(values * weight) / jnp.maximum(population, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Accumulator registry: pluggable mergeable per-stratum summary kinds
+# ---------------------------------------------------------------------------
+
+
+class Extrema(NamedTuple):
+    """Per-stratum sample extrema lattice; shapes (S+1,), ±inf identities."""
+
+    min: jnp.ndarray
+    max: jnp.ndarray
+
+
+class QuantileSketch(NamedTuple):
+    """Mergeable fixed-size per-stratum quantile histogram.
+
+    ``bins`` is (S+1, SKETCH_NUM_BINS) f32: per-stratum counts of *sampled*
+    tuples over a fixed log-domain bin layout (DDSketch-style, see
+    :func:`sketch_bin_index`).  Because the layout is a global constant, the
+    merge is plain addition — bins psum across shards, sum across panes, and
+    compose associatively/commutatively by construction.  Counts are
+    unweighted on the edge; finalize expands stratum k's row by the
+    Horvitz-Thompson factor N_k/n_k (constant within a stratum for SRS,
+    Bernoulli, and Neyman draws), which is exactly per-tuple HT weighting.
+    """
+
+    bins: jnp.ndarray
+
+
+# Sketch bin layout (global constants — the mergeability precondition).
+# Geometric bins over magnitude: relative accuracy alpha = tanh(LOG_GAMMA/2)
+# ~ 4%, covering magnitudes MIN_MAG .. MIN_MAG*e^(B*LOG_GAMMA) (~8.9 decades:
+# 1e-4 .. ~8e4); magnitudes outside clamp to the edge bins.  Layout, in
+# ascending value order: B negative-magnitude bins (reversed), one zero bin,
+# B positive-magnitude bins.
+SKETCH_BINS_PER_SIDE = 256
+SKETCH_LOG_GAMMA = 0.08
+SKETCH_MIN_MAG = 1e-4
+SKETCH_NUM_BINS = 2 * SKETCH_BINS_PER_SIDE + 1
+
+
+def sketch_bin_index(values: jnp.ndarray) -> jnp.ndarray:
+    """Value -> bin index in [0, SKETCH_NUM_BINS): the fixed log layout."""
+    v = values.astype(jnp.float32)
+    mag = jnp.abs(v)
+    k = jnp.floor(jnp.log(jnp.maximum(mag, SKETCH_MIN_MAG) / SKETCH_MIN_MAG) / SKETCH_LOG_GAMMA)
+    k = jnp.clip(k, 0, SKETCH_BINS_PER_SIDE - 1).astype(jnp.int32)
+    zero = SKETCH_BINS_PER_SIDE  # index of the |v| <= MIN_MAG bin
+    idx = jnp.where(v > SKETCH_MIN_MAG, zero + 1 + k, jnp.where(v < -SKETCH_MIN_MAG, zero - 1 - k, zero))
+    return idx.astype(jnp.int32)
+
+
+def sketch_bin_values() -> jnp.ndarray:
+    """(SKETCH_NUM_BINS,) representative value per bin (geometric mid)."""
+    k = jnp.arange(SKETCH_BINS_PER_SIDE, dtype=jnp.float32)
+    rep = SKETCH_MIN_MAG * jnp.exp((k + 0.5) * SKETCH_LOG_GAMMA)
+    return jnp.concatenate([-rep[::-1], jnp.zeros((1,), jnp.float32), rep])
+
+
+def sketch_quantile(weighted_bins: jnp.ndarray, q: float) -> jnp.ndarray:
+    """Invert a (..., SKETCH_NUM_BINS) weighted histogram at quantile ``q``.
+
+    Returns the representative value of the first bin whose cumulative mass
+    reaches ``q`` of the total (the lower-quantile convention); 0 where the
+    histogram is empty.  Works batched over leading group dimensions.
+    """
+    total = jnp.sum(weighted_bins, axis=-1, keepdims=True)
+    cdf = jnp.cumsum(weighted_bins, axis=-1)
+    target = jnp.asarray(q, jnp.float32) * total
+    idx = jnp.argmax(cdf >= jnp.maximum(target, 1e-30), axis=-1)
+    val = sketch_bin_values()[idx]
+    return jnp.where(total[..., 0] > 0, val, 0.0)
+
+
+class Accumulator:
+    """Protocol of one registry citizen: a named mergeable summary kind.
+
+    State is any pytree of (S+1,)-leading arrays.  Laws the engine relies on
+    (property-tested): ``merge`` is associative + commutative with
+    ``accumulate`` on an empty window as identity; ``merge_panes`` equals a
+    sequential merge fold; ``psum`` equals merging all shards' states;
+    ``zero_overflow`` removes the out-of-region slot from estimation.
+    """
+
+    kind: str = "?"
+
+    def accumulate(self, values, stratum_idx, mask, num_slots, counts=None):
+        """Reduce one window's sampled tuples of a column to a state."""
+        raise NotImplementedError
+
+    def merge(self, a, b):
+        """Exact pairwise combine of two states."""
+        raise NotImplementedError
+
+    def merge_panes(self, stacked):
+        """Vectorized multi-way merge over a leading pane axis."""
+        raise NotImplementedError
+
+    def psum(self, state, axis_names, shared=None):
+        """Cross-shard combine via collectives (``shared`` is an optional
+        already-combined moments state for n/total reuse)."""
+        raise NotImplementedError
+
+    def zero_overflow(self, state):
+        """Neutralize the overflow slot (merge identities there)."""
+        raise NotImplementedError
+
+    def payload_vectors(self) -> int:
+        """(S+1)-float vectors this kind adds to one column's preagg uplink
+        payload (excluding the n/total pair, shipped once per pass)."""
+        raise NotImplementedError
+
+    def template(self):
+        """Structure-only state (for shard_map out_specs trees)."""
+        raise NotImplementedError
+
+
+class MomentsAccumulator(Accumulator):
+    """Eq 4 sample moments (:class:`StratumStats`), exact Chan merges."""
+
+    kind = "moments"
+
+    def accumulate(self, values, stratum_idx, mask, num_slots, counts=None):
+        return sample_stats(values, stratum_idx, mask, num_slots, counts=counts)
+
+    def merge(self, a, b):
+        return merge_stats(a, b)
+
+    def merge_panes(self, stacked):
+        return merge_stats_panes(stacked)
+
+    def psum(self, state, axis_names, shared=None):
+        if shared is None:
+            return psum_stats(state, axis_names)
+        # columns accumulated from the same sample share n/total: reuse the
+        # combined vectors and psum only this column's wsum/raw2 pair
+        n, total = shared.n, shared.total
+        wsum = jax.lax.psum(state.wsum, axis_names)
+        raw2 = jax.lax.psum(state.m2 + state.n * state.mean * state.mean, axis_names)
+        mean = jnp.where(n > 0, wsum / jnp.maximum(n, 1.0), 0.0)
+        m2 = jnp.maximum(raw2 - n * mean * mean, 0.0)
+        return StratumStats(n=n, total=total, wsum=wsum, m2=m2, mean=mean)
+
+    def zero_overflow(self, state):
+        return zero_overflow_stats(state)
+
+    def payload_vectors(self) -> int:
+        return 2  # wsum + raw second moment (mean/m2 derived cloud-side)
+
+    def template(self):
+        return StratumStats(*(0,) * 5)
+
+
+class ExtremaAccumulator(Accumulator):
+    """Per-stratum min/max lattices with ±inf identities."""
+
+    kind = "extrema"
+
+    def accumulate(self, values, stratum_idx, mask, num_slots, counts=None):
+        v = values.astype(jnp.float32)
+        return Extrema(
+            min=jax.ops.segment_min(jnp.where(mask, v, jnp.inf), stratum_idx, num_segments=num_slots),
+            max=jax.ops.segment_max(jnp.where(mask, v, -jnp.inf), stratum_idx, num_segments=num_slots),
+        )
+
+    def identity(self, num_slots: int) -> Extrema:
+        return Extrema(
+            min=jnp.full((num_slots,), jnp.inf, jnp.float32),
+            max=jnp.full((num_slots,), -jnp.inf, jnp.float32),
+        )
+
+    def merge(self, a, b):
+        return Extrema(min=jnp.minimum(a.min, b.min), max=jnp.maximum(a.max, b.max))
+
+    def merge_panes(self, stacked):
+        return Extrema(min=jnp.min(stacked.min, axis=0), max=jnp.max(stacked.max, axis=0))
+
+    def psum(self, state, axis_names, shared=None):
+        return Extrema(
+            min=jax.lax.pmin(state.min, axis_names), max=jax.lax.pmax(state.max, axis_names)
+        )
+
+    def zero_overflow(self, state):
+        keep = jnp.arange(state.min.shape[0]) < (state.min.shape[0] - 1)
+        return Extrema(
+            min=jnp.where(keep, state.min, jnp.inf), max=jnp.where(keep, state.max, -jnp.inf)
+        )
+
+    def payload_vectors(self) -> int:
+        return 2  # min + max
+
+    def template(self):
+        return Extrema(*(0,) * 2)
+
+
+class QuantileSketchAccumulator(Accumulator):
+    """DDSketch-style mergeable log-histogram (see :class:`QuantileSketch`)."""
+
+    kind = "sketch"
+
+    def accumulate(self, values, stratum_idx, mask, num_slots, counts=None):
+        b = sketch_bin_index(values)
+        flat = stratum_idx.astype(jnp.int32) * SKETCH_NUM_BINS + b
+        bins = jax.ops.segment_sum(
+            mask.astype(jnp.float32), flat, num_segments=num_slots * SKETCH_NUM_BINS
+        )
+        return QuantileSketch(bins=bins.reshape(num_slots, SKETCH_NUM_BINS))
+
+    def merge(self, a, b):
+        return QuantileSketch(bins=a.bins + b.bins)
+
+    def merge_panes(self, stacked):
+        return QuantileSketch(bins=jnp.sum(stacked.bins, axis=0))
+
+    def psum(self, state, axis_names, shared=None):
+        return QuantileSketch(bins=jax.lax.psum(state.bins, axis_names))
+
+    def zero_overflow(self, state):
+        keep = jnp.arange(state.bins.shape[0]) < (state.bins.shape[0] - 1)
+        return QuantileSketch(bins=jnp.where(keep[:, None], state.bins, 0.0))
+
+    def payload_vectors(self) -> int:
+        return SKETCH_NUM_BINS
+
+    def template(self):
+        return QuantileSketch(bins=0)
+
+
+ACCUMULATORS: dict[str, Accumulator] = {}
+
+
+def register_accumulator(acc: Accumulator) -> Accumulator:
+    """Add (or replace) a registry citizen; returns it for chaining."""
+    ACCUMULATORS[acc.kind] = acc
+    return acc
+
+
+MOMENTS = register_accumulator(MomentsAccumulator())
+EXTREMA = register_accumulator(ExtremaAccumulator())
+SKETCH = register_accumulator(QuantileSketchAccumulator())
+
+
+def accumulator(kind: str) -> Accumulator:
+    acc = ACCUMULATORS.get(kind)
+    if acc is None:
+        raise KeyError(
+            f"unknown accumulator kind {kind!r}; registered: {sorted(ACCUMULATORS)}"
+        )
+    return acc
+
+
+# -- column-level operations over {kind: state} dicts ------------------------
+
+
+def accumulate_column(
+    kinds: Sequence[str],
+    values: jnp.ndarray,
+    stratum_idx: jnp.ndarray,
+    mask: jnp.ndarray,
+    num_slots: int,
+    counts: jnp.ndarray | None = None,
+) -> dict:
+    """One column's registry states for the requested accumulator kinds."""
+    return {
+        k: accumulator(k).accumulate(values, stratum_idx, mask, num_slots, counts=counts)
+        for k in kinds
+    }
+
+
+def merge_accs(a: dict, b: dict) -> dict:
+    return {k: accumulator(k).merge(a[k], b[k]) for k in a}
+
+
+def merge_accs_panes(stacked: dict) -> dict:
+    """Vectorized pane merge of one column's stacked states (leading P axis)."""
+    return {k: accumulator(k).merge_panes(s) for k, s in stacked.items()}
+
+
+def psum_accs(accs: dict, axis_names, shared: StratumStats | None = None) -> dict:
+    """Cross-shard combine of one column's states; pass an already-combined
+    moments state as ``shared`` to skip the redundant n/total psums."""
+    return {
+        k: accumulator(k).psum(s, axis_names, shared=shared if k == "moments" else None)
+        for k, s in accs.items()
+    }
+
+
+def zero_overflow_accs(accs: dict) -> dict:
+    return {k: accumulator(k).zero_overflow(s) for k, s in accs.items()}
+
+
+def accs_template(kinds: Sequence[str]) -> dict:
+    return {k: accumulator(k).template() for k in kinds}

@@ -7,9 +7,20 @@ edge-cloud split:
 Edge tier  = the mesh shards along the data axes: each shard independently
              stratifies + EdgeSOS-samples its local window (no cross-shard
              communication in the sampling path) and reduces every column
-             the query references to a mergeable per-stratum
-             ``ColumnStats`` accumulator — the *edge partial-aggregation
-             program*.
+             the query references to its plan-declared set of mergeable
+             per-stratum accumulator states (``{kind: state}`` registry
+             pytrees: moments / extrema / quantile sketch / anything
+             registered) — the *edge partial-aggregation program*.  The
+             moment reductions run on a configurable backend
+             (``PipelineConfig.backend``):
+
+               * ``"segment"`` — per-column ``jax.ops.segment_*`` (the
+                 portable path and the parity oracle);
+               * ``"pallas"``  — ONE fused multi-column edge-reduce pass
+                 (``kernels/edge_reduce``): all fusion-group columns'
+                 moment rows contract against the one-hot stratum tile in
+                 a single MXU sweep per window; off-TPU this lowers to the
+                 equivalent single-pass stacked segment reduce.
 Cloud tier = the post-collective computation: consolidate shard partials
              and finalize each aggregate into an ``AggEstimate`` with error
              bounds, optionally grouped by stratum / neighborhood — the
@@ -56,21 +67,37 @@ from . import query as aqp
 
 from ..sharding.compat import compat_shard_map as _shard_map
 
-from .estimators import ColumnStats, Estimate, StratumStats
+from .estimators import Estimate, StratumStats
 from .query import AggEstimate, AggSpec, Plan, Query, QueryResult
 from .sampling import SampleResult
 from .stratify import StratumTable
 from .windows import WindowBatch
 
 
+BACKENDS = ("segment", "pallas")
+
+
 @dataclasses.dataclass(frozen=True)
 class PipelineConfig:
-    """Deployment-level defaults; per-query settings live on ``Query``."""
+    """Deployment-level defaults; per-query settings live on ``Query``.
+
+    ``backend`` selects the edge moment-reduction implementation:
+    ``"segment"`` (per-column segment ops, portable parity oracle) or
+    ``"pallas"`` (fused multi-column edge-reduce — the Pallas MXU kernel on
+    TPU, its single-pass stacked-segment equivalent elsewhere).  Sampling
+    co-dispatches: ``"pallas"`` on TPU also routes geohash encoding and
+    Bernoulli selection through their kernels.
+    """
 
     method: str = "srs"  # srs | bernoulli | neyman  (legacy-API default)
     mode: str = "preagg"  # preagg | raw              (legacy-API default)
     confidence: float = 0.95
     raw_capacity: int | None = None  # static per-shard buffer for raw mode
+    backend: str = "segment"  # segment | pallas (edge reduction backend)
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}; got {self.backend!r}")
 
 
 class WindowResult(NamedTuple):
@@ -96,12 +123,14 @@ def edge_sample(
     fraction,
     method: str,
     stddev: jnp.ndarray | None = None,
+    backend: str = "segment",
 ) -> tuple[jnp.ndarray, SampleResult]:
     """Edge-local half of Algorithm 2: stratify + EdgeSOS sample."""
-    sidx = table.assign(lat, lon)
+    sidx = table.assign(lat, lon, backend=backend)
     sidx = jnp.where(valid, sidx, table.num_strata)  # padding -> overflow
     result = sampling.edgesos(
-        key, sidx, table.num_slots, fraction, method=method, stddev=stddev
+        key, sidx, table.num_slots, fraction, method=method, stddev=stddev,
+        backend=backend,
     )
     mask = result.mask & valid
     weight = jnp.where(valid, result.weight, 0.0)
@@ -111,6 +140,49 @@ def edge_sample(
     )
     n_k = jax.ops.segment_sum(mask.astype(jnp.int32), sidx, num_segments=table.num_slots)
     return sidx, SampleResult(mask=mask, weight=weight, n_k=n_k, counts=counts)
+
+
+def _accumulate_columns(
+    plan: Plan,
+    cfg: PipelineConfig,
+    cols: Mapping[str, jnp.ndarray],
+    sidx,
+    mask,
+    num_slots: int,
+    counts,
+) -> dict:
+    """Reduce every referenced column to its plan-declared registry states.
+
+    The moment states of ALL columns come from one fused multi-column
+    edge-reduce pass when ``cfg.backend == "pallas"`` (the MXU kernel on
+    TPU, the stacked single-pass segment reduce elsewhere) — one window
+    traversal for the whole fusion group — or from per-column segment ops
+    on the ``"segment"`` oracle backend.  Non-moment kinds (extrema
+    lattices, quantile sketches) accumulate via their registry entries.
+    """
+    kinds_map = plan.column_kind_map
+    stats: dict = {c: {} for c in plan.columns}
+    if cfg.backend == "pallas":
+        from ..kernels.edge_reduce import edge_reduce
+
+        stacked = jnp.stack([cols[c].astype(jnp.float32) for c in plan.columns])
+        cnt, s1, s2 = edge_reduce(sidx, stacked, mask, num_slots)
+        for i, c in enumerate(plan.columns):
+            stats[c]["moments"] = estimators.stats_from_raw_moments(
+                cnt, s1[i], s2[i], counts
+            )
+    else:
+        for c in plan.columns:
+            stats[c]["moments"] = estimators.MOMENTS.accumulate(
+                cols[c], sidx, mask, num_slots, counts=counts
+            )
+    for c in plan.columns:
+        for kind in kinds_map[c]:
+            if kind != "moments":
+                stats[c][kind] = estimators.accumulator(kind).accumulate(
+                    cols[c], sidx, mask, num_slots, counts=counts
+                )
+    return stats
 
 
 def _edge_program(
@@ -127,50 +199,50 @@ def _edge_program(
 ):
     """The lowered edge half of a plan (+ the consolidating collective).
 
-    Returns ``(stats, n_sampled, n_valid, n_overflow, comm_bytes)`` where
-    ``stats`` maps column -> globally merged ColumnStats.  With ``axes``
-    set this runs inside shard_map and consolidation is a collective;
-    otherwise it is the single-edge-node program.
+    Returns ``(stats, n_sampled, n_valid, n_overflow, n_truncated,
+    comm_bytes)`` where ``stats`` maps column -> globally merged
+    ``{kind: state}`` accumulator dict.  With ``axes`` set this runs inside
+    shard_map and consolidation is a collective; otherwise it is the
+    single-edge-node program.
     """
     q = plan.query
     if axes is not None:
         key = jax.random.fold_in(key, jax.lax.axis_index(axes))
     ok = valid & aqp.roi_mask(plan, table, lat, lon)
-    sidx, sample = edge_sample(key, table, lat, lon, ok, fraction, q.method)
+    sidx, sample = edge_sample(
+        key, table, lat, lon, ok, fraction, q.method, backend=cfg.backend
+    )
+    n_truncated = jnp.int32(0)
     if q.mode == "raw":
         cap = cfg.raw_capacity or lat.shape[0]
         packed = sampling.compact(
             sample.mask, cap, sidx, *[cols[c] for c in plan.columns]
         )
+        # kept tuples beyond the static buffer are silently shed by
+        # compact(); account for them so QueryResult can surface the loss
+        kept = jnp.sum(sample.mask.astype(jnp.int32))
+        n_truncated = jnp.maximum(kept - jnp.int32(min(cap, lat.shape[0])), 0)
         counts = sample.counts
         if axes is not None:
             packed = tuple(jax.lax.all_gather(p, axes, tiled=True) for p in packed)
             counts = jax.lax.psum(counts, axes)
         v_ok, v_sidx = packed[0], packed[1]
-        stats = {
-            c: estimators.column_stats(
-                packed[2 + i], v_sidx, v_ok, table.num_slots, counts=counts,
-                extrema=c in plan.extrema_columns,
-            )
-            for i, c in enumerate(plan.columns)
-        }
+        gathered = {c: packed[2 + i] for i, c in enumerate(plan.columns)}
+        stats = _accumulate_columns(
+            plan, cfg, gathered, v_sidx, v_ok, table.num_slots, counts
+        )
         comm = jnp.int32(aqp.raw_bytes(plan, cap))
     else:
-        stats = {
-            c: estimators.column_stats(
-                cols[c], sidx, sample.mask, table.num_slots, counts=sample.counts,
-                extrema=c in plan.extrema_columns,
-            )
-            for c in plan.columns
-        }
+        stats = _accumulate_columns(
+            plan, cfg, cols, sidx, sample.mask, table.num_slots, sample.counts
+        )
         if axes is not None:
             merged: dict = {}
             shared = None
             for c in plan.columns:
-                merged[c] = estimators.psum_column_stats(
-                    stats[c], axes, shared=shared, extrema=c in plan.extrema_columns
-                )
-                shared = shared or merged[c]  # n/total identical across columns
+                merged[c] = estimators.psum_accs(stats[c], axes, shared=shared)
+                # n/total identical across columns: psum them only once
+                shared = shared if shared is not None else merged[c]["moments"]
             stats = merged
         comm = jnp.int32(aqp.preagg_bytes(plan, table.num_slots))
     n_sampled = jnp.sum(sample.mask.astype(jnp.int32))
@@ -180,17 +252,25 @@ def _edge_program(
         n_sampled = jax.lax.psum(n_sampled, axes)
         n_valid = jax.lax.psum(n_valid, axes)
         n_overflow = jax.lax.psum(n_overflow, axes)
-    return stats, n_sampled, n_valid, n_overflow, comm
+        n_truncated = jax.lax.psum(n_truncated, axes)
+    return stats, n_sampled, n_valid, n_overflow, n_truncated, comm
+
+
+def _stats_template(plan: Plan) -> dict:
+    """Structure-only column -> {kind: state} tree for out_specs."""
+    kinds_map = plan.column_kind_map
+    return {c: estimators.accs_template(kinds_map[c]) for c in plan.columns}
 
 
 def _result_template(plan: Plan) -> QueryResult:
     """Structure-only QueryResult (for shard_map out_specs trees)."""
     return QueryResult(
         estimates={a.key: AggEstimate(*(0,) * 7) for a in plan.query.aggs},
-        stats={c: ColumnStats(*(0,) * 7) for c in plan.columns},
+        stats=_stats_template(plan),
         n_sampled=0,
         n_valid=0,
         n_overflow=0,
+        n_truncated=0,
         comm_bytes=0,
     )
 
@@ -248,7 +328,7 @@ class EdgeCloudPipeline:
         table, cfg = self.table, self.config
 
         def run(key, lat, lon, cols, valid, fraction, axes=None):
-            stats, n_sampled, n_valid, n_overflow, comm = _edge_program(
+            stats, n_sampled, n_valid, n_overflow, n_truncated, comm = _edge_program(
                 plan, table, cfg, key, lat, lon, cols, valid, fraction, axes=axes
             )
             return QueryResult(
@@ -257,6 +337,7 @@ class EdgeCloudPipeline:
                 n_sampled=n_sampled,
                 n_valid=n_valid,
                 n_overflow=n_overflow,
+                n_truncated=n_truncated,
                 comm_bytes=comm,
             )
 
@@ -284,7 +365,7 @@ class EdgeCloudPipeline:
                 plan, table, cfg, key, lat, lon, cols, valid, fraction, axes=axes
             )
 
-        template = ({c: ColumnStats(*(0,) * 7) for c in plan.columns}, 0, 0, 0, 0)
+        template = (_stats_template(plan), 0, 0, 0, 0, 0)
         fn = self._compiled(plan, run, template, sharded)
         self._passes[(plan, sharded)] = fn
         return fn
@@ -341,10 +422,10 @@ class EdgeCloudPipeline:
     @partial(jax.jit, static_argnums=(0,))
     def process_window(self, key, lat, lon, value, valid, fraction) -> WindowResult:
         plan = self.plan(self._canonical_query())
-        stats, n_sampled, n_valid, n_overflow, comm = _edge_program(
+        stats, n_sampled, n_valid, n_overflow, _trunc, comm = _edge_program(
             plan, self.table, self.config, key, lat, lon, {"value": value}, valid, fraction
         )
-        base = stats["value"].base
+        base = stats["value"]["moments"]
         est = estimators.estimate(_zero_overflow(base), self.config.confidence)
         # a moment-only single-column plan ships exactly the legacy payload
         return WindowResult(
@@ -365,7 +446,7 @@ class EdgeCloudPipeline:
         res = fn(
             key, lat, lon, {"value": value}, jnp.asarray(valid), jnp.float32(fraction)
         )
-        base = res.stats["value"].base
+        base = res.stats["value"]["moments"]
         est = estimators.estimate(_zero_overflow(base), self.config.confidence)
         # moment-only single-column plans ship the legacy payloads in both
         # modes (preagg 4 vectors, raw 9 bytes/slot), so comm passes through

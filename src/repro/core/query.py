@@ -28,12 +28,23 @@ Supported aggregate kinds and their error semantics:
   var          plug-in population variance (within + between stratum
                decomposition over the sample), reported as a point estimate;
   min / max    sample extrema (point estimates; a sample extreme bounds the
-               population extreme from inside).
+               population extreme from inside);
+  p<q>         quantiles (``p50``, ``p99``, ``p99.9`` …) from the mergeable
+               per-stratum log-histogram sketch, Horvitz-Thompson-expanded
+               per stratum at finalize; point estimates with the sketch's
+               documented ~4% relative value accuracy.
+
+Each aggregate kind lowers to a set of **accumulator kinds** from the
+registry in :mod:`.estimators` (``moments`` | ``extrema`` | ``sketch`` |
+anything registered later); a plan carries, per referenced column, the
+union of the kinds its aggregates need — the edge accumulates exactly
+those states, nothing more.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import re
 from typing import NamedTuple
 
 import jax
@@ -47,18 +58,36 @@ KINDS = ("sum", "mean", "count", "min", "max", "var")
 GROUP_KEYS = (None, "stratum", "neighborhood")
 METHODS = ("srs", "bernoulli", "neyman")
 
-# Accumulator fields of ColumnStats each aggregate kind needs on the edge.
-# sum/mean/var carry m2 because their finalize evaluates the stratified
-# variance (eq 6) for error bounds; count needs only the population counts
-# (plus n for coverage accounting); extrema ride on the min/max lattices.
-ACCUMULATOR_FIELDS: dict[str, tuple[str, ...]] = {
-    "sum": ("n", "total", "wsum", "m2", "mean"),
-    "mean": ("n", "total", "wsum", "m2", "mean"),
-    "var": ("n", "total", "wsum", "m2", "mean"),
-    "count": ("n", "total"),
-    "min": ("n", "min"),
-    "max": ("n", "max"),
+# Registry accumulator kinds each aggregate kind needs on the edge.  Every
+# column carries "moments" (n/total back coverage accounting and the
+# Horvitz-Thompson expansion of the other kinds' finalizes); extrema ride on
+# the min/max lattices, quantiles on the mergeable log-histogram sketch.
+ACCUMULATOR_KINDS: dict[str, tuple[str, ...]] = {
+    "sum": ("moments",),
+    "mean": ("moments",),
+    "var": ("moments",),
+    "count": ("moments",),
+    "min": ("moments", "extrema"),
+    "max": ("moments", "extrema"),
 }
+
+_QUANTILE_RE = re.compile(r"p(\d{1,2}(?:\.\d+)?)")
+
+
+def quantile_of(kind: str) -> float | None:
+    """The quantile in (0, 1) of a ``p<q>`` aggregate kind, else None."""
+    m = _QUANTILE_RE.fullmatch(kind)
+    if not m:
+        return None
+    q = float(m.group(1)) / 100.0
+    return q if 0.0 < q < 1.0 else None
+
+
+def agg_accumulator_kinds(kind: str) -> tuple[str, ...]:
+    """Registry kinds an aggregate kind's edge program must accumulate."""
+    if quantile_of(kind) is not None:
+        return ("moments", "sketch")
+    return ACCUMULATOR_KINDS[kind]
 
 
 class AggSpec(NamedTuple):
@@ -109,8 +138,11 @@ class Query:
         if not aggs:
             raise ValueError("Query needs at least one AggSpec")
         for a in aggs:
-            if a.kind not in KINDS:
-                raise ValueError(f"unknown aggregate kind {a.kind!r}; choose from {KINDS}")
+            if a.kind not in KINDS and quantile_of(a.kind) is None:
+                raise ValueError(
+                    f"unknown aggregate kind {a.kind!r}; choose from {KINDS} "
+                    "or a quantile like 'p50'/'p99'"
+                )
         keys = [a.key for a in aggs]
         if len(set(keys)) != len(keys):
             raise ValueError(f"duplicate aggregate keys: {keys}")
@@ -147,11 +179,12 @@ class Plan:
 
     Attributes:
       query: the source spec.
-      columns: distinct value columns needing a ColumnStats accumulator.
-      accumulators: per aggregate key, the ColumnStats fields its finalize
-        reads — the "expected accumulator set" of the lowering.
-      extrema_columns: the subset of ``columns`` some min/max aggregate
-        reads; the others skip extrema reductions/collectives entirely.
+      columns: distinct value columns needing edge accumulators.
+      accumulators: per aggregate key, the registry accumulator *kinds* its
+        finalize reads — the "expected accumulator set" of the lowering.
+      column_kinds: per referenced column, the union of registry kinds its
+        aggregates need; the edge accumulates exactly these states and the
+        collective ships exactly their payloads.
       num_groups: static result width (1 when ``group_by`` is None).
       roi_prefix_code: pre-parsed geohash code when ``roi`` is a prefix.
     """
@@ -159,7 +192,7 @@ class Plan:
     query: Query
     columns: tuple[str, ...]
     accumulators: tuple[tuple[str, tuple[str, ...]], ...]
-    extrema_columns: tuple[str, ...] = ()
+    column_kinds: tuple[tuple[str, tuple[str, ...]], ...] = ()
     num_groups: int = 1
     roi_prefix_code: int | None = None
 
@@ -167,14 +200,38 @@ class Plan:
     def accumulator_map(self) -> dict[str, tuple[str, ...]]:
         return dict(self.accumulators)
 
+    @property
+    def column_kind_map(self) -> dict[str, tuple[str, ...]]:
+        return dict(self.column_kinds)
+
+    @property
+    def extrema_columns(self) -> tuple[str, ...]:
+        """Columns some min/max aggregate reads (derived view)."""
+        return tuple(c for c, kinds in self.column_kinds if "extrema" in kinds)
+
+    @property
+    def sketch_columns(self) -> tuple[str, ...]:
+        """Columns some quantile aggregate reads (derived view)."""
+        return tuple(c for c, kinds in self.column_kinds if "sketch" in kinds)
+
 
 def lower(query: Query, table: StratumTable) -> Plan:
     """Lower a declarative Query against a stratum table into a Plan."""
     columns = tuple(dict.fromkeys(a.column for a in query.aggs))
-    accs = tuple((a.key, ACCUMULATOR_FIELDS[a.kind]) for a in query.aggs)
-    extrema = tuple(
-        c for c in columns
-        if any(a.column == c and a.kind in ("min", "max") for a in query.aggs)
+    accs = tuple((a.key, agg_accumulator_kinds(a.kind)) for a in query.aggs)
+    column_kinds = tuple(
+        (
+            c,
+            tuple(
+                dict.fromkeys(
+                    k
+                    for a in query.aggs
+                    if a.column == c
+                    for k in agg_accumulator_kinds(a.kind)
+                )
+            ),
+        )
+        for c in columns
     )
     if query.group_by == "stratum":
         num_groups = table.num_strata
@@ -194,7 +251,7 @@ def lower(query: Query, table: StratumTable) -> Plan:
         query=query,
         columns=columns,
         accumulators=accs,
-        extrema_columns=extrema,
+        column_kinds=column_kinds,
         num_groups=num_groups,
         roi_prefix_code=prefix_code,
     )
@@ -220,9 +277,9 @@ def fusion_key(plan: Plan) -> tuple:
 class FusedPlan:
     """A set of lowered queries served by one shared edge pass.
 
-    ``shared`` is a synthetic carrier plan whose column / extrema /
-    accumulator sets are the unions over ``members``: executing its edge
-    program produces every per-stratum accumulator any member's finalize
+    ``shared`` is a synthetic carrier plan whose column / accumulator-kind
+    sets are the unions over ``members``: executing its edge program
+    produces every per-stratum accumulator state any member's finalize
     reads.  Each member then carves its own estimates out of the shared
     merged ``ColumnStats`` (``finalize(member, table, stats)``) — N queries,
     one stratify+EdgeSOS pass, one collective.
@@ -248,7 +305,7 @@ def fuse(plans) -> FusedPlan:
     """Fuse lowered plans that share a sampling signature into one pass.
 
     Unions the referenced columns (order-preserving across members), the
-    per-aggregate accumulator field sets, and the extrema column sets; the
+    per-aggregate accumulator-kind sets, and the per-column kind sets; the
     ROI/method/mode are required to agree (:func:`fusion_key`) so the shared
     sample is elementwise-identical to each member's independent sample —
     callers (``StreamSession``) partition heterogeneous query sets into
@@ -264,11 +321,13 @@ def fuse(plans) -> FusedPlan:
             f"(method, mode, roi): {sorted(keys, key=repr)}"
         )
     columns = tuple(dict.fromkeys(c for p in plans for c in p.columns))
-    extrema = tuple(c for c in columns if any(c in p.extrema_columns for p in plans))
+    col_kinds: dict[str, tuple[str, ...]] = {c: () for c in columns}
     accs: dict[str, tuple[str, ...]] = {}
     for p in plans:
-        for agg_key, fields in p.accumulators:
-            accs[agg_key] = tuple(dict.fromkeys(accs.get(agg_key, ()) + tuple(fields)))
+        for agg_key, kinds in p.accumulators:
+            accs[agg_key] = tuple(dict.fromkeys(accs.get(agg_key, ()) + tuple(kinds)))
+        for c, kinds in p.column_kinds:
+            col_kinds[c] = tuple(dict.fromkeys(col_kinds[c] + tuple(kinds)))
     q0 = plans[0].query
     carrier = Query(
         aggs=tuple(AggSpec("mean", c) for c in columns),
@@ -281,7 +340,7 @@ def fuse(plans) -> FusedPlan:
         query=carrier,
         columns=columns,
         accumulators=tuple(accs.items()),
-        extrema_columns=extrema,
+        column_kinds=tuple(col_kinds.items()),
         num_groups=1,
         roi_prefix_code=plans[0].roi_prefix_code,
     )
@@ -323,10 +382,11 @@ class QueryResult(NamedTuple):
     """pipeline.execute output: per-aggregate estimates + diagnostics."""
 
     estimates: dict  # agg key -> AggEstimate
-    stats: dict  # column -> merged ColumnStats (S+1 slots, overflow kept)
+    stats: dict  # column -> {kind: state} registry pytree (overflow slot kept)
     n_sampled: jnp.ndarray
     n_valid: jnp.ndarray
     n_overflow: jnp.ndarray
+    n_truncated: jnp.ndarray  # raw-mode kept tuples shed by the static buffer
     comm_bytes: jnp.ndarray  # analytic edge->cloud payload of the plan's mode
 
 
@@ -356,15 +416,16 @@ def _gsum(x: jnp.ndarray, grp: jnp.ndarray, num: int) -> jnp.ndarray:
     return jax.ops.segment_sum(x, grp, num_segments=num + 1)[:num]
 
 
-def finalize(plan: Plan, table: StratumTable, stats: dict[str, ColumnStats]) -> dict:
-    """Cloud-side consolidation: merged accumulators -> AggEstimates.
+def finalize(plan: Plan, table: StratumTable, stats: dict[str, dict]) -> dict:
+    """Cloud-side consolidation: merged accumulator states -> AggEstimates.
 
     This is the "local consolidation query" half of the split: it sees only
-    per-stratum accumulators (never raw tuples) and evaluates every AggSpec,
-    grouping strata into the plan's result groups.
+    per-stratum accumulator states (never raw tuples) — ``stats`` maps each
+    column to its ``{kind: state}`` registry dict — and evaluates every
+    AggSpec, grouping strata into the plan's result groups.
 
     For ``group_by=None`` the stratified sum/mean path evaluates
-    :func:`estimators.estimate` on the moment view — the exact legacy
+    :func:`estimators.estimate` on the moments state — the exact legacy
     computation, which keeps the ``process_window`` shim bit-compatible.
     """
     q = plan.query
@@ -375,8 +436,10 @@ def finalize(plan: Plan, table: StratumTable, stats: dict[str, ColumnStats]) -> 
 
     out: dict[str, AggEstimate] = {}
     full_est: dict[str, estimators.Estimate] = {}
+    zeroed = {c: estimators.zero_overflow_accs(stats[c]) for c in plan.columns}
     for spec in q.aggs:
-        cs = zero_overflow_column(stats[spec.column])
+        accs = zeroed[spec.column]
+        cs = accs["moments"]
         n, N = cs.n, cs.total
         active = (n > 0) & (N > 0)
         if grouped:
@@ -397,8 +460,29 @@ def finalize(plan: Plan, table: StratumTable, stats: dict[str, ColumnStats]) -> 
             )
             continue
 
+        qv = quantile_of(spec.kind)
+        if qv is not None:
+            # Horvitz-Thompson expansion: within a stratum every sampled
+            # tuple carries the same weight N_k/n_k (SRS/Bernoulli/Neyman),
+            # so scaling stratum rows expands the sample histogram to a
+            # population histogram exactly as per-tuple weighting would.
+            w_k = jnp.where(n > 0, N / jnp.maximum(n, 1.0), 0.0)
+            wb = w_k[:, None] * accs["sketch"].bins  # (S+1, NUM_BINS)
+            if grouped:
+                wb_g = jax.ops.segment_sum(wb, grp, num_segments=num + 1)[:num]
+            else:
+                wb_g = jnp.sum(wb, axis=0)
+            val = estimators.sketch_quantile(wb_g, qv)
+            zero = jnp.zeros_like(val)
+            out[spec.key] = AggEstimate(
+                value=val, moe=zero, ci_low=val, ci_high=val,
+                relative_error=zero, n=n_g, population=pop_g,
+            )
+            continue
+
         if spec.kind in ("min", "max"):
-            field = cs.min if spec.kind == "min" else cs.max
+            ext = accs["extrema"]
+            field = ext.min if spec.kind == "min" else ext.max
             if grouped:
                 seg = jax.ops.segment_min if spec.kind == "min" else jax.ops.segment_max
                 val = seg(field, grp, num_segments=num + 1)[:num]
@@ -415,7 +499,7 @@ def finalize(plan: Plan, table: StratumTable, stats: dict[str, ColumnStats]) -> 
             # exact legacy path (bit-compatible with the pre-query pipeline)
             est = full_est.get(spec.column)
             if est is None:
-                est = estimators.estimate(cs.base, q.confidence)
+                est = estimators.estimate(cs, q.confidence)
                 full_est[spec.column] = est
             if spec.kind == "sum":
                 moe_s = z * jnp.sqrt(jnp.maximum(est.var_sum, 0.0))
@@ -480,12 +564,14 @@ def finalize(plan: Plan, table: StratumTable, stats: dict[str, ColumnStats]) -> 
 
 def preagg_bytes(plan: Plan, num_slots: int) -> int:
     """Analytic per-shard payload of preagg mode: n/total are shared across
-    columns (psummed once); wsum/raw2 cross per column (mean and m2 are
-    derived cloud-side), min/max only for columns an extrema aggregate
-    reads.  4-byte floats.  A single moment-only column gives the legacy
-    4-vector payload."""
-    fields = 2 + 2 * len(plan.columns) + 2 * len(plan.extrema_columns)
-    return 4 * num_slots * fields
+    columns (psummed once); every other (S+1)-float vector is declared by
+    the accumulator kinds the plan carries per column (moments: wsum/raw2,
+    extrema: min/max, sketch: its bin rows).  4-byte floats.  A single
+    moment-only column gives the legacy 4-vector payload."""
+    vectors = 2  # shared n/total
+    for _c, kinds in plan.column_kinds:
+        vectors += sum(estimators.accumulator(k).payload_vectors() for k in kinds)
+    return 4 * num_slots * vectors
 
 
 def raw_bytes(plan: Plan, capacity: int) -> int:

@@ -115,15 +115,26 @@ def srs_sample(
 
 
 def bernoulli_sample(
-    key, stratum_idx: jnp.ndarray, num_slots: int, fraction
+    key, stratum_idx: jnp.ndarray, num_slots: int, fraction, backend: str = "segment"
 ) -> SampleResult:
-    """Per-stratum Bernoulli(f_k) sampling (no sort; random n_k)."""
+    """Per-stratum Bernoulli(f_k) sampling (no sort; random n_k).
+
+    ``backend="pallas"`` routes the fused gather+threshold+weight step
+    through the ``kernels/sample_mask`` one-hot MXU kernel on TPU (same
+    uniforms, so the sampling decisions are bit-identical); elsewhere it
+    falls back to this segment implementation.
+    """
     counts = stratum_counts(stratum_idx, num_slots)
     frac_k = jnp.broadcast_to(jnp.asarray(fraction, jnp.float32), (num_slots,))
     u = jax.random.uniform(key, stratum_idx.shape)
-    mask = u < frac_k[stratum_idx]
+    if backend == "pallas" and jax.default_backend() == "tpu":
+        from ..kernels.sample_mask import sample_mask as _kernel
+
+        mask, weight = _kernel(stratum_idx, u, frac_k)
+    else:
+        mask = u < frac_k[stratum_idx]
+        weight = jnp.where(mask, 1.0 / jnp.maximum(frac_k[stratum_idx], 1e-9), 0.0)
     n_k = jax.ops.segment_sum(mask.astype(jnp.int32), stratum_idx, num_segments=num_slots)
-    weight = jnp.where(mask, 1.0 / jnp.maximum(frac_k[stratum_idx], 1e-9), 0.0)
     return SampleResult(mask=mask, weight=weight, n_k=n_k, counts=counts)
 
 
@@ -136,6 +147,7 @@ def edgesos(
     method: str = "srs",
     stddev: jnp.ndarray | None = None,
     min_per_stratum: int = 1,
+    backend: str = "segment",
 ) -> SampleResult:
     """Algorithm 1 (EdgeSOS): stratified sample of one window.
 
@@ -146,9 +158,10 @@ def edgesos(
       fraction: scalar or per-stratum sampling fraction in (0, 1].
       method: 'srs' (paper-faithful exact SRS) | 'bernoulli' | 'neyman'.
       stddev: per-stratum std estimates (required for 'neyman').
+      backend: 'segment' | 'pallas' (fused Bernoulli selection kernel on TPU).
     """
     if method == "bernoulli":
-        return bernoulli_sample(key, stratum_idx, num_slots, fraction)
+        return bernoulli_sample(key, stratum_idx, num_slots, fraction, backend=backend)
     counts = stratum_counts(stratum_idx, num_slots)
     if method == "srs":
         n_k = allocate_proportional(counts, fraction)

@@ -19,9 +19,11 @@ approximate analytics wins by sharing one sampling pass):
     estimates out of the shared merged ``ColumnStats``.
   * Sliding/hopping windows fall out of the mergeable-accumulator design:
     the edge reduces each *pane* (stride-sized sub-window) to per-stratum
-    ``ColumnStats``; the session keeps a ring of panes per query and merges
-    them cloud-side (:func:`~.estimators.merge_column_stats_panes`) into
-    each window's answer without re-touching raw tuples.
+    registry pytrees (``{column: {kind: state}}`` — moments, extrema,
+    quantile sketches, any registered accumulator); the session keeps a
+    ring of panes per query and merges them cloud-side
+    (:func:`~.estimators.merge_accs_panes`, one vectorized pass per kind)
+    into each window's answer without re-touching raw tuples.
   * Per-query QoS runs through a vectorized feedback controller state (one
     fraction per registered query, :func:`~.feedback.update_vector`); each
     fusion group samples at the max fraction of its members, so every query
@@ -56,10 +58,11 @@ from .windows import WindowSpec
 class _Pane(NamedTuple):
     """One pane's contribution to a registered query's window ring."""
 
-    stats: dict  # column -> ColumnStats (this query's columns only)
+    stats: dict  # column -> {kind: state} registry pytree (query's columns)
     n_sampled: jnp.ndarray
     n_valid: jnp.ndarray
     n_overflow: jnp.ndarray
+    n_truncated: jnp.ndarray
     n_dropped: int
     comm_bytes: int
 
@@ -245,7 +248,7 @@ class StreamSession:
 
             def run(stacked):
                 merged = {
-                    c: estimators.merge_column_stats_panes(stacked[c]) for c in plan.columns
+                    c: estimators.merge_accs_panes(stacked[c]) for c in plan.columns
                 }
                 return aqp.finalize(plan, table, merged), merged
 
@@ -259,24 +262,26 @@ class StreamSession:
         if len(panes) == 1:
             estimates, stats = self._finalize_fn(reg, 1)(panes[0].stats)
         else:
-            stacked = {
-                c: estimators.stack_column_stats([p.stats[c] for p in panes])
-                for c in reg.plan.columns
-            }
+            stacked = jax.tree.map(
+                lambda *xs: jnp.stack(xs, axis=0), *[p.stats for p in panes]
+            )
             estimates, stats = self._finalize_fn(reg, len(panes))(stacked)
         n_sampled = panes[0].n_sampled
         n_valid = panes[0].n_valid
         n_overflow = panes[0].n_overflow
+        n_truncated = panes[0].n_truncated
         for p in panes[1:]:
             n_sampled = n_sampled + p.n_sampled
             n_valid = n_valid + p.n_valid
             n_overflow = n_overflow + p.n_overflow
+            n_truncated = n_truncated + p.n_truncated
         return QueryResult(
             estimates=estimates,
             stats=stats,
             n_sampled=n_sampled,
             n_valid=n_valid,
             n_overflow=n_overflow,
+            n_truncated=n_truncated,
             # uplink spent on this window's span: one shared pass per pane
             comm_bytes=jnp.int32(sum(p.comm_bytes for p in panes)),
         )
@@ -299,19 +304,26 @@ class StreamSession:
             fraction = max(r.fraction for r in members)
             lat, lon, cols, valid = self.pipe._window_arrays(pane, fused.shared)
             fn = self.pipe._pass_fn(fused.shared, self.sharded)
-            stats, n_sampled, n_valid, n_overflow, _ = fn(
+            stats, n_sampled, n_valid, n_overflow, n_truncated, _ = fn(
                 key, lat, lon, cols, valid, jnp.float32(fraction)
             )
             # analytic, host-side: avoid syncing on the device pass here
             comm = self._analytic_comm(fused, lat.shape[0])
             comm_total += comm
             for reg in members:
+                kinds_map = reg.plan.column_kind_map
                 reg.ring.append(
                     _Pane(
-                        stats={c: stats[c] for c in reg.plan.columns},
+                        # carve this query's columns *and* accumulator kinds
+                        # out of the shared pass's union states
+                        stats={
+                            c: {k: stats[c][k] for k in kinds_map[c]}
+                            for c in reg.plan.columns
+                        },
                         n_sampled=n_sampled,
                         n_valid=n_valid,
                         n_overflow=n_overflow,
+                        n_truncated=n_truncated,
                         n_dropped=n_dropped,
                         comm_bytes=comm,
                     )

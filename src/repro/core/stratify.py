@@ -64,9 +64,22 @@ class StratumTable:
         hit = self.codes[idx] == codes
         return jnp.where(hit, idx, self.num_strata).astype(jnp.int32)
 
-    def assign(self, lat: jnp.ndarray, lon: jnp.ndarray) -> jnp.ndarray:
-        """Coordinates -> stratum index (encode + table lookup)."""
-        return self.lookup(geohash.encode(lat, lon, self.precision))
+    def assign(
+        self, lat: jnp.ndarray, lon: jnp.ndarray, backend: str = "segment"
+    ) -> jnp.ndarray:
+        """Coordinates -> stratum index (encode + table lookup).
+
+        ``backend="pallas"`` routes the geohash encode through the fused
+        quantize+Morton Pallas kernel on TPU (bit-identical to the jnp
+        encoder, which remains the path everywhere else).
+        """
+        if backend == "pallas" and jax.default_backend() == "tpu":
+            from ..kernels.geohash import geohash_encode
+
+            codes = geohash_encode(lat, lon, self.precision)
+        else:
+            codes = geohash.encode(lat, lon, self.precision)
+        return self.lookup(codes)
 
     def neighborhood_of(self, stratum_idx: jnp.ndarray) -> jnp.ndarray:
         """O(1) gather: stratum index -> neighborhood id."""

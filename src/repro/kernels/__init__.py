@@ -7,6 +7,10 @@ hot loop.  On TPU those become:
   geohash/          fused quantize + Morton interleave (VPU integer)
   stratified_stats/ per-stratum {count, Σy, Σy²} as blocked one-hot
                     matmuls on the MXU (hash-aggregation replacement)
+  edge_reduce/      the multi-column generalization of stratified_stats:
+                    one (1+2C, N_blk) @ onehot MXU pass yields every fused
+                    query column's moments — the preagg hot path behind
+                    ``PipelineConfig(backend="pallas")``
   sample_mask/      fused per-stratum threshold gather (one-hot MXU) +
                     Bernoulli keep mask + Horvitz-Thompson weights
   flash_attention/  blocked causal attention for the LM serving substrate
@@ -16,6 +20,6 @@ ref.py (pure-jnp oracle); tests sweep shapes/dtypes in interpret mode and
 assert allclose against the oracle.
 """
 
-from . import flash_attention, geohash, sample_mask, stratified_stats
+from . import edge_reduce, flash_attention, geohash, sample_mask, stratified_stats
 
-__all__ = ["flash_attention", "geohash", "sample_mask", "stratified_stats"]
+__all__ = ["edge_reduce", "flash_attention", "geohash", "sample_mask", "stratified_stats"]

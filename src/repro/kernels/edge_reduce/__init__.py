@@ -1,0 +1,3 @@
+from .ops import edge_reduce
+
+__all__ = ["edge_reduce"]

@@ -1,0 +1,25 @@
+"""Public wrapper: Pallas on TPU, one-pass stacked segment reduce elsewhere.
+
+Off-TPU the Pallas interpreter is a correctness tool, not a perf path, so
+the auto mode (``interpret=None``) lowers to the fused single-pass
+``segment_sum`` oracle instead — the pipeline's ``backend="pallas"`` stays
+portable (and still beats the per-column segment path by running one
+sort/scatter for the whole fusion group).  Pass ``interpret=True`` to force
+the interpreted kernel (parity tests).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from .edge_reduce import edge_reduce_pallas
+from .ref import edge_reduce_ref
+
+
+def edge_reduce(stratum_idx, values, mask, num_slots: int, interpret: bool | None = None):
+    """-> (count (S,), s1 (C, S), s2 (C, S)) raw per-stratum power sums."""
+    if interpret is None:
+        if jax.default_backend() != "tpu":
+            return edge_reduce_ref(stratum_idx, values, mask, num_slots)
+        interpret = False
+    return edge_reduce_pallas(stratum_idx, values, mask, num_slots, interpret=interpret)

@@ -1,0 +1,46 @@
+"""Oracles: per-column segment sums (legacy) and one-pass stacked reduce.
+
+``edge_reduce_ref`` is the bit-level oracle for the Pallas kernel *and* the
+portable fused fast path: all 1+2C moment rows go through ONE
+``segment_sum`` (a single sort/scatter pass over the window) instead of the
+3·C independent segment reductions of the per-column path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _moment_rows(values: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Stack [m, m·y_c, m·y_c²] rows for a (C, N) column block -> (1+2C, N).
+
+    The single definition of the row layout shared by the Pallas kernel and
+    the oracles — the host-side slice offsets (rows 1..C are Σy, rows
+    C+1..2C are Σy²) depend on this ordering.
+    """
+    m = mask.astype(jnp.float32)
+    v = values.astype(jnp.float32)
+    my = m[None, :] * v
+    return jnp.concatenate([m[None, :], my, my * v], axis=0)
+
+
+def edge_reduce_ref(stratum_idx, values, mask, num_slots: int):
+    """Single-pass stacked oracle: one (N, R) segment_sum for all columns."""
+    c = values.shape[0]
+    rows = _moment_rows(values, mask)  # (1+2C, N)
+    out = jax.ops.segment_sum(rows.T, stratum_idx, num_segments=num_slots)  # (S, R)
+    return out[:, 0], out[:, 1 : 1 + c].T, out[:, 1 + c : 1 + 2 * c].T
+
+
+def edge_reduce_percol(stratum_idx, values, mask, num_slots: int):
+    """The per-column segment path (3 reductions per column) — the baseline
+    the fused kernel is benchmarked against."""
+    m = mask.astype(jnp.float32)
+    count = jax.ops.segment_sum(m, stratum_idx, num_segments=num_slots)
+    s1, s2 = [], []
+    for col in values:
+        y = col.astype(jnp.float32)
+        s1.append(jax.ops.segment_sum(m * y, stratum_idx, num_segments=num_slots))
+        s2.append(jax.ops.segment_sum(m * y * y, stratum_idx, num_segments=num_slots))
+    return count, jnp.stack(s1), jnp.stack(s2)

@@ -38,6 +38,21 @@ class strategies:  # noqa: N801 - mimics `hypothesis.strategies` module
         return _Strategy(sampler)
 
     @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+
+        def sampler(rng, i):
+            if i < len(elements):
+                return elements[i]
+            return elements[int(rng.integers(0, len(elements)))]
+
+        return _Strategy(sampler)
+
+    @staticmethod
+    def booleans():
+        return strategies.sampled_from([False, True])
+
+    @staticmethod
     def floats(min_value, max_value, allow_nan=False, width=64):
         bounds = [min_value, max_value, (min_value + max_value) / 2.0]
 

@@ -20,7 +20,7 @@ from repro.core import (
     windows,
 )
 from repro.core.pipeline import _zero_overflow
-from repro.core.query import ACCUMULATOR_FIELDS, KINDS
+from repro.core.query import KINDS, agg_accumulator_kinds, quantile_of
 from repro.data.streams import shenzhen_taxi_stream
 
 
@@ -38,16 +38,32 @@ def window():
 # -- plan lowering -----------------------------------------------------------
 
 
-@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("kind", KINDS + ("p50", "p99", "p99.9"))
 def test_lowering_accumulator_sets(table, kind):
-    """Each AggSpec lowers to its documented accumulator field set."""
+    """Each AggSpec lowers to its documented registry accumulator-kind set,
+    and the plan's per-column kind union covers exactly those kinds."""
     q = Query(aggs=(AggSpec(kind, "value"),))
     plan = lower(q, table)
     assert plan.columns == ("value",)
-    assert plan.accumulator_map[f"{kind}_value"] == ACCUMULATOR_FIELDS[kind]
-    # error-bounded kinds need the second moment; exact/extrema kinds don't
-    needs_m2 = kind in ("sum", "mean", "var")
-    assert ("m2" in plan.accumulator_map[f"{kind}_value"]) == needs_m2
+    kinds = agg_accumulator_kinds(kind)
+    assert plan.accumulator_map[f"{kind}_value"] == kinds
+    assert plan.column_kind_map["value"] == kinds
+    # every kind leans on moments (coverage accounting / HT expansion);
+    # min/max add the extrema lattice, quantiles the mergeable sketch
+    assert "moments" in kinds
+    assert ("extrema" in kinds) == (kind in ("min", "max"))
+    assert ("sketch" in kinds) == (quantile_of(kind) is not None)
+
+
+def test_lowering_column_kind_union(table):
+    """A column referenced by several aggregates carries the kind union."""
+    q = Query(
+        aggs=(AggSpec("mean", "value"), AggSpec("max", "value"), AggSpec("p99", "value"))
+    )
+    plan = lower(q, table)
+    assert plan.column_kind_map["value"] == ("moments", "extrema", "sketch")
+    assert plan.extrema_columns == ("value",)
+    assert plan.sketch_columns == ("value",)
 
 
 def test_lowering_columns_and_groups(table):
@@ -67,6 +83,10 @@ def test_query_validation(table):
         Query(aggs=())
     with pytest.raises(ValueError):
         Query(aggs=(AggSpec("median", "value"),))
+    with pytest.raises(ValueError):
+        Query(aggs=(AggSpec("p0", "value"),))  # quantile must be in (0, 1)
+    with pytest.raises(ValueError):
+        Query(aggs=(AggSpec("p100", "value"),))
     with pytest.raises(ValueError):
         Query(aggs=(AggSpec("sum", "value"),), group_by="city")
     with pytest.raises(ValueError):
@@ -142,6 +162,8 @@ def test_empty_stratum_identities(rng):
 ALL_AGGS = tuple(AggSpec(k, "value") for k in KINDS) + (
     AggSpec("mean", "occupancy"),
     AggSpec("max", "occupancy"),
+    AggSpec("p50", "value"),
+    AggSpec("p99", "value"),
 )
 
 
@@ -260,6 +282,85 @@ def test_multi_column_window(table, window):
         pipe.execute(
             Query(aggs=(AggSpec("mean", "humidity"),)), jax.random.key(0), window
         )
+
+
+def test_quantiles_match_numpy_oracle(table, window):
+    """p50/p99 at fraction=1.0 land within the sketch's documented relative
+    value accuracy (~4%) of the exact numpy quantiles."""
+    pipe = EdgeCloudPipeline(table)
+    q = Query(aggs=(AggSpec("p50", "value"), AggSpec("p99", "value")))
+    r = pipe.execute(q, jax.random.key(0), window, fraction=1.0)
+    sidx = np.asarray(table.assign(jnp.asarray(window.lat), jnp.asarray(window.lon)))
+    v = window.value[sidx < table.num_strata]
+    for key, quant in (("p50_value", 0.5), ("p99_value", 0.99)):
+        true = float(np.quantile(v, quant))
+        got = float(r.estimates[key].value)
+        assert got == pytest.approx(true, rel=0.05, abs=1e-3), key
+        # quantiles are point estimates: zero-width intervals
+        assert float(r.estimates[key].moe) == 0.0
+
+
+def test_quantiles_under_sampling_stay_close(table, window):
+    """The HT-expanded sketch quantile tracks the truth at fraction<1."""
+    pipe = EdgeCloudPipeline(table)
+    q = Query(aggs=(AggSpec("p50", "value"),))
+    truth = float(
+        pipe.execute(q, jax.random.key(0), window, 1.0).estimates["p50_value"].value
+    )
+    got = float(
+        pipe.execute(q, jax.random.key(3), window, 0.3).estimates["p50_value"].value
+    )
+    assert got == pytest.approx(truth, rel=0.1)
+
+
+def test_grouped_quantiles_match_numpy(table, window):
+    """group_by=neighborhood p50 at full fraction == per-group numpy medians
+    (within sketch accuracy)."""
+    pipe = EdgeCloudPipeline(table)
+    q = Query(aggs=(AggSpec("p50", "value"),), group_by="neighborhood")
+    r = pipe.execute(q, jax.random.key(0), window, fraction=1.0)
+    vals = np.asarray(r.estimates["p50_value"].value)
+    assert vals.shape == (table.num_neighborhoods,)
+    sidx = np.asarray(table.assign(jnp.asarray(window.lat), jnp.asarray(window.lon)))
+    nb = np.asarray(table.neighborhood)[sidx]
+    for g in range(table.num_neighborhoods):
+        sel = (nb == g) & (sidx < table.num_strata)
+        if sel.sum() > 50:
+            assert vals[g] == pytest.approx(
+                float(np.quantile(window.value[sel], 0.5)), rel=0.05, abs=1e-3
+            ), g
+
+
+# -- raw-mode buffer overflow accounting --------------------------------------
+
+
+def test_raw_truncation_surfaced_and_boundary(table, window):
+    """Kept tuples beyond the static raw buffer are counted in
+    ``n_truncated`` (previously shed silently); at or under capacity the
+    count is zero and the estimates are unaffected."""
+    q = Query(aggs=(AggSpec("mean", "value"),), mode="raw")
+    key = jax.random.key(2)
+    # generous buffer: nothing truncated
+    pipe_ok = EdgeCloudPipeline(table, PipelineConfig(raw_capacity=window.capacity))
+    r_ok = pipe_ok.execute(q, key, window, fraction=0.5)
+    kept = int(r_ok.n_sampled)
+    assert int(r_ok.n_truncated) == 0
+    # boundary: capacity exactly == kept sample -> still zero
+    pipe_edge = EdgeCloudPipeline(table, PipelineConfig(raw_capacity=kept))
+    r_edge = pipe_edge.execute(q, key, window, fraction=0.5)
+    assert int(r_edge.n_truncated) == 0
+    assert float(r_edge.estimates["mean_value"].value) == pytest.approx(
+        float(r_ok.estimates["mean_value"].value), rel=1e-6
+    )
+    # one short: exactly one kept tuple is shed, and the loss is surfaced
+    pipe_tight = EdgeCloudPipeline(table, PipelineConfig(raw_capacity=kept - 1))
+    r_tight = pipe_tight.execute(q, key, window, fraction=0.5)
+    assert int(r_tight.n_truncated) == 1
+    # preagg mode never truncates
+    r_pre = pipe_ok.execute(
+        Query(aggs=(AggSpec("mean", "value"),)), key, window, 0.5
+    )
+    assert int(r_pre.n_truncated) == 0
 
 
 def test_moe_shrinks_with_fraction(table, window):

@@ -56,9 +56,10 @@ def panes():
     return list(windows.count_windows(stream, PANE))[:6]
 
 
-# A workload of concurrent queries: indices 0-3 share the default sampling
-# signature (one fusion group); 4 (raw mode) and 5 (bernoulli) each get
-# their own group.  Distinct aggs/group-by/confidence fuse freely.
+# A workload of concurrent queries: indices 0-3 and 6 share the default
+# sampling signature (one fusion group); 4 (raw mode) and 5 (bernoulli) each
+# get their own group.  Distinct aggs/group-by/confidence fuse freely — the
+# quantile query (6) rides the same pass, adding only its sketch states.
 POOL = (
     Query(aggs=(AggSpec("mean", "value"), AggSpec("max", "value"))),
     Query(aggs=(AggSpec("sum", "value"), AggSpec("var", "value")), confidence=0.9),
@@ -69,6 +70,7 @@ POOL = (
     Query(aggs=(AggSpec("min", "occupancy"),), group_by="stratum"),
     Query(aggs=(AggSpec("mean", "value"),), mode="raw"),
     Query(aggs=(AggSpec("mean", "value"), AggSpec("count", "value")), method="bernoulli"),
+    Query(aggs=(AggSpec("p99", "value"), AggSpec("p50", "occupancy"))),
 )
 
 
@@ -182,6 +184,22 @@ def test_sliding_window_equals_tumbling_span(pipe, panes):
     assert int(res.n_valid) == int(ind.n_valid)
     # partial windows at the start cover only the panes seen so far
     assert int(history[0].results[reg.qid].n_valid) == PANE
+
+
+def test_sliding_quantile_equals_tumbling_span(pipe, panes):
+    """Quantile panes merge exactly: summed sketch bins across a sliding
+    window's panes equal one accumulation over the concatenated span, so the
+    sliding p50/p99 match the one-shot execute bit-for-bit at full fraction."""
+    q = Query(aggs=(AggSpec("p50", "value"), AggSpec("p99", "value")))
+    sess = StreamSession(pipe, initial_fraction=1.0)
+    reg = sess.register(q, window=WindowSpec("sliding", size=3))
+    history = sess.run(panes[:3], key=jax.random.key(0))
+    res = history[-1].results[reg.qid]
+    ind = pipe.execute(q, jax.random.key(9), _concat(panes[:3]), 1.0)
+    for key in ("p50_value", "p99_value"):
+        a = float(np.asarray(ind.estimates[key].value))
+        b = float(np.asarray(res.estimates[key].value))
+        assert b == pytest.approx(a, rel=1e-6), key
 
 
 def test_vectorized_pane_merge_matches_sequential(rng):

@@ -37,3 +37,28 @@ def mape_mae(est_means: np.ndarray, true_means: np.ndarray, counts: np.ndarray,
 
 def csv_line(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.1f},{derived}"
+
+
+def json_flag_path(argv) -> str | None:
+    """The PATH following ``--json`` in argv, or None when the flag is
+    absent; exits with a usage message instead of an IndexError when the
+    flag is given without a path."""
+    if "--json" not in argv:
+        return None
+    i = argv.index("--json") + 1
+    if i >= len(argv) or argv[i].startswith("-"):
+        raise SystemExit("usage: --json PATH")
+    return argv[i]
+
+
+def write_metrics_json(path: str, metrics: dict, prefix: str) -> None:
+    """Dump a small-config metrics dict to ``path`` and echo the non-config
+    entries as ``prefix/key,value`` lines (the CI log's human view)."""
+    import json
+
+    with open(path, "w") as f:
+        json.dump(metrics, f, indent=2, sort_keys=True)
+    print(f"wrote {path}")
+    for k, v in sorted(metrics.items()):
+        if k != "config":
+            print(f"{prefix}/{k},{v}")

@@ -85,14 +85,55 @@ def run():
     return lines
 
 
+def small_metrics(n: int = 20_000, strata: int = 500) -> dict:
+    """Fixed small-configuration kernel metrics for CI regression tracking:
+    fused multi-column edge-reduce vs the per-column segment baseline
+    (wall us + speedup at 4 and 8 columns, with parity checks)."""
+    rng = np.random.default_rng(0)
+    sidx = jnp.asarray(rng.integers(0, strata, n), jnp.int32)
+    mask = jnp.asarray(rng.random(n) < 0.8)
+    out: dict = {"config": {"n": n, "strata": strata, "backend": jax.default_backend()}}
+    for c in (4, 8):
+        cols = jnp.asarray(rng.normal(10, 3, (c, n)), jnp.float32)
+        fused = jax.jit(lambda s, v, m: edge_reduce(s, v, m, strata))
+        percol = jax.jit(lambda s, v, m: edge_reduce_percol(s, v, m, strata))
+        fused_us = time_call(fused, sidx, cols, mask)
+        percol_us = time_call(percol, sidx, cols, mask)
+        g = edge_reduce(sidx, cols, mask, strata)
+        r = edge_reduce_ref(sidx, cols, mask, strata)
+        out[f"edge_reduce_fused_c{c}_us"] = fused_us
+        out[f"edge_reduce_percol_c{c}_us"] = percol_us
+        out[f"edge_reduce_fused_speedup_c{c}"] = percol_us / max(fused_us, 1e-9)
+        out[f"edge_reduce_parity_c{c}"] = all(
+            bool(jnp.allclose(a, b, rtol=1e-5, atol=1e-2)) for a, b in zip(g, r)
+        )
+    return out
+
+
 def main() -> None:
-    """Standalone entry (CI smoke): ``python -m benchmarks.kernel_bench [--dry]``.
+    """Standalone entry (CI smoke): ``python -m benchmarks.kernel_bench
+    [--dry] [--json PATH]``.
 
     ``--dry`` runs every kernel once on tiny shapes (interpret-mode parity
-    included off-TPU) without the timing loops.
+    included off-TPU) without the timing loops.  ``--json PATH`` runs the
+    fixed small CI configuration and writes the edge-reduce metrics dict
+    to PATH (see ``benchmarks.regression`` for the gate).
     """
     import sys
 
+    from .common import json_flag_path, write_metrics_json
+
+    path = json_flag_path(sys.argv[1:])
+    if path is not None:
+        metrics = small_metrics()
+        write_metrics_json(path, metrics, "kernel_bench")
+        bad = [
+            k for k, v in metrics.items()
+            if k.startswith("edge_reduce_parity") and v is False
+        ]
+        if bad:
+            raise SystemExit(f"kernel parity failed in bench config: {bad}")
+        return
     print("name,us_per_call,derived")
     if "--dry" in sys.argv[1:]:
         rng = np.random.default_rng(0)

@@ -9,7 +9,11 @@ stratify+EdgeSOS pass vs N independent `execute` calls, for
 N ∈ {1, 4, 16}, in wall time and edge->cloud collective bytes — and
 (e) the edge-reduce backend on a wide fusion group: the single-pass
 multi-column reduction (`backend="pallas"`) vs the per-column segment
-path, for 4- and 8-column groups, plus the quantile-sketch query cost.
+path, for 4- and 8-column groups, plus the quantile-sketch query cost and
+the bootstrap error-bounds finalize overhead.
+
+``--json PATH`` runs a fixed small configuration and writes the metrics
+CI's regression gate consumes (``benchmarks/regression.py``).
 """
 
 from __future__ import annotations
@@ -143,3 +147,95 @@ def run():
         "query_bench/quantile_p50_p99", us_quant,
         f"window={WINDOW};vs_query3={us_quant / max(us, 1e-9):.2f}x",
     )
+
+    # error-bounds finalize cost: the bootstrap (var + p99 CIs, default 200
+    # replicates) against the same query with bounds disabled
+    aggs_b = (AggSpec("var", "value"), AggSpec("p99", "value"))
+    us_bounds = time_call(pipe.execute, Query(aggs=aggs_b), key, win, FRACTION)
+    us_nobounds = time_call(
+        pipe.execute, Query(aggs=aggs_b, bootstrap_replicates=0), key, win, FRACTION
+    )
+    yield csv_line(
+        "query_bench/bounds_var_p99", us_bounds,
+        f"window={WINDOW};replicates=200;"
+        f"vs_disabled={us_bounds / max(us_nobounds, 1e-9):.2f}x",
+    )
+
+
+def small_metrics(window: int = 20_000, n_queries: int = 4, fraction: float = FRACTION) -> dict:
+    """Fixed small-configuration metrics for CI regression tracking.
+
+    Wall microseconds, uplink bytes, and the fused-vs-independent speedup of
+    an ``n_queries`` fusion group — the numbers ``benchmarks/baselines.json``
+    gates (see ``benchmarks.regression``).
+    """
+    table = make_table(*SHENZHEN_BBOX, precision=5)
+    pipe = EdgeCloudPipeline(table, PipelineConfig(raw_capacity=window))
+    w = next(windows.count_windows(shenzhen_taxi_stream(num_chunks=2, seed=0), window))
+    win = {
+        "lat": jnp.asarray(w.lat, jnp.float32),
+        "lon": jnp.asarray(w.lon, jnp.float32),
+        "valid": jnp.asarray(w.valid),
+        "value": jnp.asarray(w.value, jnp.float32),
+        "occupancy": jnp.asarray(w.extra["occupancy"], jnp.float32),
+    }
+    key = jax.random.key(0)
+    queries = _query_set(n_queries)
+    sess = StreamSession(pipe, initial_fraction=fraction)
+    for q in queries:
+        sess.register(q)
+
+    def fused_step():
+        step = sess.step(key, win)
+        return [r.estimates for r in step.results.values()]
+
+    def independent():
+        return [pipe.execute(q, key, win, fraction).estimates for q in queries]
+
+    us_fused = time_call(fused_step)
+    us_indep = time_call(independent)
+    fused_bytes = int(sess.step(key, win).comm_bytes)
+    indep_bytes = sum(
+        int(pipe.execute(q, key, win, fraction).comm_bytes) for q in queries
+    )
+    q_bounds = Query(aggs=(AggSpec("var", "value"), AggSpec("p99", "value")))
+    us_bounds = time_call(pipe.execute, q_bounds, key, win, fraction)
+    return {
+        "config": {
+            "window": window,
+            "queries": n_queries,
+            "fraction": fraction,
+            "precision": 5,
+        },
+        f"session_fused_n{n_queries}_us": us_fused,
+        f"independent_n{n_queries}_us": us_indep,
+        f"fused_speedup_n{n_queries}": us_indep / max(us_fused, 1e-9),
+        f"fused_uplink_bytes_n{n_queries}": fused_bytes,
+        f"independent_uplink_bytes_n{n_queries}": indep_bytes,
+        f"uplink_ratio_n{n_queries}": indep_bytes / max(fused_bytes, 1),
+        "bounds_var_p99_us": us_bounds,
+    }
+
+
+def main() -> None:
+    """Standalone entry: ``python -m benchmarks.query_bench [--json PATH]``.
+
+    ``--json PATH`` runs the fixed small CI configuration and writes the
+    metrics dict (wall us, uplink bytes, fused speedup) to PATH; without it
+    the full CSV benchmark suite streams to stdout.
+    """
+    import sys
+
+    from .common import json_flag_path, write_metrics_json
+
+    path = json_flag_path(sys.argv[1:])
+    if path is not None:
+        write_metrics_json(path, small_metrics(), "query_bench")
+        return
+    print("name,us_per_call,derived")
+    for line in run():
+        print(line, flush=True)
+
+
+if __name__ == "__main__":
+    main()

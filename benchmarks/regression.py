@@ -1,0 +1,93 @@
+"""CI benchmark regression gate.
+
+Compares measured benchmark JSONs (written by ``python -m
+benchmarks.query_bench --json ...`` / ``python -m benchmarks.kernel_bench
+--json ...``) against the committed ``benchmarks/baselines.json`` and fails
+when a gated metric regresses beyond tolerance.
+
+Only *ratio* metrics are gated (fused-vs-independent speedups): absolute
+wall times vary with runner hardware, but a speedup is a same-machine
+A/B — if the fused session stops beating N independent executes, a
+regression slipped into the fusion path.  Raw wall/byte numbers still land
+in the uploaded artifacts for trend eyeballing.
+
+Usage:
+    python -m benchmarks.regression BENCH_query.json BENCH_kernel.json \
+        [--baseline benchmarks/baselines.json] [--tolerance 0.2]
+
+``baselines.json`` format — per measured-file-basename sections of gated
+metric floors, plus an optional default tolerance::
+
+    {
+      "tolerance": 0.2,
+      "BENCH_query.json":  {"fused_speedup_n4": 3.5},
+      "BENCH_kernel.json": {"edge_reduce_fused_speedup_c8": 4.0}
+    }
+
+A measured value passes when ``measured >= (1 - tolerance) * baseline``.
+Gated keys missing from a measured file fail loudly (a renamed metric must
+be re-baselined, not silently ungated).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def check(measured_paths, baseline_path, tolerance=None):
+    """Returns (failures, report_lines); failures is a list of strings."""
+    with open(baseline_path) as f:
+        baselines = json.load(f)
+    tol = tolerance if tolerance is not None else float(baselines.get("tolerance", 0.2))
+    failures: list[str] = []
+    report: list[str] = []
+    for path in measured_paths:
+        name = os.path.basename(path)
+        gates = baselines.get(name)
+        if gates is None:
+            report.append(f"{name}: no gates in baseline (artifact only)")
+            continue
+        with open(path) as f:
+            measured = json.load(f)
+        for key, base in gates.items():
+            floor = (1.0 - tol) * float(base)
+            got = measured.get(key)
+            if got is None:
+                failures.append(f"{name}:{key} missing from measured output")
+                continue
+            ok = float(got) >= floor
+            report.append(
+                f"{name}:{key} measured={float(got):.3f} baseline={float(base):.3f} "
+                f"floor={floor:.3f} {'OK' if ok else 'REGRESSED'}"
+            )
+            if not ok:
+                failures.append(
+                    f"{name}:{key} regressed: {float(got):.3f} < {floor:.3f} "
+                    f"(= (1-{tol})·{float(base):.3f})"
+                )
+    return failures, report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("measured", nargs="+", help="measured BENCH_*.json files")
+    ap.add_argument("--baseline", default="benchmarks/baselines.json")
+    ap.add_argument("--tolerance", type=float, default=None,
+                    help="override the baseline file's tolerance")
+    args = ap.parse_args()
+    failures, report = check(args.measured, args.baseline, args.tolerance)
+    for line in report:
+        print(line)
+    if failures:
+        print(f"\n{len(failures)} regression(s):", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        raise SystemExit(1)
+    print("benchmark regression gate: PASS")
+
+
+if __name__ == "__main__":
+    main()

@@ -41,7 +41,7 @@ The legacy ``pipe.process_window(...)`` single-estimate API remains as a
 shim over the canonical ``SUM/MEAN(value)`` query.
 """
 
-from . import estimators, feedback, geohash, query, routing, sampling, session, stratify, windows
+from . import bounds, estimators, feedback, geohash, query, routing, sampling, session, stratify, windows
 from .estimators import (
     Accumulator,
     ColumnStats,
@@ -53,6 +53,7 @@ from .estimators import (
     accumulator,
     column_stats,
     estimate,
+    guarded_s2,
     merge_accs,
     merge_accs_panes,
     merge_column_stats,
@@ -106,6 +107,7 @@ __all__ = [
     "accumulate_column",
     "accumulator",
     "balanced_plan",
+    "bounds",
     "column_stats",
     "compact",
     "contiguous_plan",
@@ -117,6 +119,7 @@ __all__ = [
     "fuse",
     "fusion_key",
     "geohash",
+    "guarded_s2",
     "lower",
     "make_table",
     "make_table_from_codes",

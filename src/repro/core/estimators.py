@@ -8,7 +8,8 @@ intervals / margin of error / relative error.
 This module also hosts the **accumulator registry** — the pluggable layer
 the query engine reduces windows into.  An :class:`Accumulator` is a named
 kind of mergeable per-stratum summary (``accumulate / merge / merge_panes /
-psum / zero_overflow``); the built-in citizens are
+psum / zero_overflow / interval`` — the last derives sampling-error CIs
+from the merged state, see :mod:`.bounds`); the built-in citizens are
 
   * ``moments``  — the eq 4 sample moments (:class:`StratumStats`), exact
     Chan-et-al. merges; backs sum/mean/count/var,
@@ -309,6 +310,50 @@ def z_value(confidence: float) -> jnp.ndarray:
     return ndtri(1.0 - alpha / 2.0).astype(jnp.float32)
 
 
+def guarded_s2(
+    n: jnp.ndarray,
+    total: jnp.ndarray,
+    m2: jnp.ndarray,
+    grp: jnp.ndarray | None = None,
+    num_groups: int = 1,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-stratum sample variance with the lonely-singleton guard.
+
+    A stratum sampled at ``n_k == 1`` while under-sampled (``n_k < N_k``)
+    has an *unidentified* variance; plugging in its recorded ``m2 == 0``
+    silently reports zero sampling error (false certainty that collapses
+    the SLO feedback loop).  Following the survey-statistics lonely-PSU
+    "average" adjustment, such strata borrow the mean ``s²`` of the
+    identified (``n_k >= 2``) strata of their group.  Returns
+    ``(s2_eff, unidentified)`` where ``unidentified`` flags groups whose
+    variance *no* stratum identifies — their half-width must be reported
+    as infinite, which the feedback controller treats as "hold the
+    fraction" (graceful degradation instead of a poisoned update).
+    """
+    s2 = jnp.where(n > 1, m2 / jnp.maximum(n - 1.0, 1.0), 0.0)
+    active = (n > 0) & (total > 0)
+    known = active & (n > 1)
+    lonely = active & (n < 2) & (n < total)
+
+    def reduce(x):
+        if grp is None:
+            return jnp.sum(x)
+        return jax.ops.segment_sum(x, grp, num_segments=num_groups + 1)[:num_groups]
+
+    cnt = reduce(known.astype(jnp.float32))
+    s2_bar = reduce(jnp.where(known, s2, 0.0)) / jnp.maximum(cnt, 1.0)
+    s2_bar_k = s2_bar if grp is None else s2_bar_at(s2_bar, grp)
+    s2_eff = jnp.where(lonely, s2_bar_k, s2)
+    unidentified = (reduce(lonely.astype(jnp.float32)) > 0) & (cnt == 0)
+    return s2_eff, unidentified
+
+
+def s2_bar_at(s2_bar_g: jnp.ndarray, grp: jnp.ndarray) -> jnp.ndarray:
+    """Gather per-group imputed s² back to strata (overflow slot -> 0)."""
+    padded = jnp.concatenate([s2_bar_g, jnp.zeros((1,), s2_bar_g.dtype)])
+    return padded[jnp.clip(grp, 0, s2_bar_g.shape[0])]
+
+
 def estimate(stats: StratumStats, confidence: float = 0.95) -> Estimate:
     """Equations (5)–(10) from merged per-stratum statistics.
 
@@ -317,20 +362,26 @@ def estimate(stats: StratumStats, confidence: float = 0.95) -> Estimate:
     (tiny N_k at low fractions — the paper's "neighborhoods with too few
     data points" caveat) would otherwise bias the mean toward zero.  Under
     full coverage this equals the textbook eq 5 exactly.
+
+    Under-sampled singleton strata (``n_k == 1 < N_k``) carry the
+    :func:`guarded_s2` lonely-PSU adjustment: they borrow the average s²
+    of identified strata instead of contributing false-zero variance; if
+    *no* stratum identifies a variance the half-width is infinite.
     """
     n = stats.n
     N = stats.total
     active = (n > 0) & (N > 0)
     mean_k = stats.mean
-    # s_k^2 (eq 4); needs n_k >= 2, else contributes zero variance but we
-    # keep full-population strata exact via the fpc term anyway.
-    s2_k = jnp.where(n > 1, stats.m2 / jnp.maximum(n - 1.0, 1.0), 0.0)
+    # s_k^2 (eq 4) with the singleton guard; full-population strata stay
+    # exact via the fpc term regardless.
+    s2_k, unidentified = guarded_s2(n, N, stats.m2)
     sum_hat = jnp.sum(jnp.where(active, N * mean_k, 0.0))  # eq 5
     population = jnp.sum(N)
     covered = jnp.sum(jnp.where(active, N, 0.0))
     mean_hat = sum_hat / jnp.maximum(covered, 1.0)  # eq 5 (ratio form)
     fpc = jnp.where(N > 0, 1.0 - n / jnp.maximum(N, 1.0), 0.0)
     var_sum = jnp.sum(jnp.where(active, N * N * fpc * s2_k / jnp.maximum(n, 1.0), 0.0))  # eq 6
+    var_sum = jnp.where(unidentified, jnp.inf, var_sum)
     var_mean = var_sum / jnp.maximum(covered, 1.0) ** 2  # eq 7
     z = z_value(confidence)
     moe = z * jnp.sqrt(jnp.maximum(var_mean, 0.0))  # eq 9
@@ -361,10 +412,17 @@ def substream_sums(stats_per_substream: Sequence[StratumStats]) -> jnp.ndarray:
 
 
 def per_stratum_means(stats: StratumStats, confidence: float = 0.95):
-    """Per-stratum mean and CI half-width (for heatmaps / per-cell queries)."""
+    """Per-stratum mean and CI half-width (for heatmaps / per-cell queries).
+
+    A stratum is its own group here, so no lonely-singleton imputation is
+    possible: under-sampled strata with ``n_k < 2`` report an *infinite*
+    half-width instead of the false-zero a singleton's ``m2 == 0`` would
+    plug in (fully sampled strata stay exact: fpc == 0)."""
     s2_k = jnp.where(stats.n > 1, stats.m2 / jnp.maximum(stats.n - 1.0, 1.0), 0.0)
     fpc = jnp.where(stats.total > 0, 1.0 - stats.n / jnp.maximum(stats.total, 1.0), 0.0)
-    var_k = jnp.where(stats.n > 0, fpc * s2_k / jnp.maximum(stats.n, 1.0), jnp.inf)
+    var_k = fpc * s2_k / jnp.maximum(stats.n, 1.0)
+    identified = (stats.n > 1) | ((stats.n > 0) & (stats.n >= stats.total))
+    var_k = jnp.where(identified, var_k, jnp.inf)
     moe_k = z_value(confidence) * jnp.sqrt(jnp.maximum(var_k, 0.0))
     return stats.mean, moe_k
 
@@ -435,18 +493,46 @@ def sketch_bin_values() -> jnp.ndarray:
     return jnp.concatenate([-rep[::-1], jnp.zeros((1,), jnp.float32), rep])
 
 
+def sketch_bin_edges() -> jnp.ndarray:
+    """(SKETCH_NUM_BINS + 1,) ascending bin boundaries of the fixed layout.
+
+    Bin ``i`` covers ``[edges[i], edges[i+1]]``; the zero bin spans
+    ``[-MIN_MAG, MIN_MAG]`` and the outermost edges clamp the layout range.
+    """
+    k = jnp.arange(SKETCH_BINS_PER_SIDE + 1, dtype=jnp.float32)
+    pos = SKETCH_MIN_MAG * jnp.exp(k * SKETCH_LOG_GAMMA)
+    return jnp.concatenate([-pos[::-1], pos])
+
+
 def sketch_quantile(weighted_bins: jnp.ndarray, q: float) -> jnp.ndarray:
     """Invert a (..., SKETCH_NUM_BINS) weighted histogram at quantile ``q``.
 
-    Returns the representative value of the first bin whose cumulative mass
-    reaches ``q`` of the total (the lower-quantile convention); 0 where the
-    histogram is empty.  Works batched over leading group dimensions.
+    Continuous inversion: finds the first bin whose cumulative mass reaches
+    ``q`` of the total and interpolates linearly between that bin's edges by
+    the within-bin mass fraction; 0 where the histogram is empty.  The
+    continuity matters beyond accuracy — it is what lets the bootstrap in
+    :mod:`.bounds` resolve sampling error *finer than one bin* (a
+    representative-value inversion would quantize replicate quantiles to the
+    bin grid and collapse narrow CIs to zero width).  Works batched over
+    leading group/replicate dimensions.
     """
     total = jnp.sum(weighted_bins, axis=-1, keepdims=True)
     cdf = jnp.cumsum(weighted_bins, axis=-1)
-    target = jnp.asarray(q, jnp.float32) * total
-    idx = jnp.argmax(cdf >= jnp.maximum(target, 1e-30), axis=-1)
-    val = sketch_bin_values()[idx]
+    target = jnp.maximum(jnp.asarray(q, jnp.float32) * total, 1e-30)
+    idx = jnp.argmax(cdf >= target, axis=-1)
+    c_cur = jnp.take_along_axis(cdf, idx[..., None], axis=-1)[..., 0]
+    c_prev = jnp.where(
+        idx > 0,
+        jnp.take_along_axis(cdf, jnp.maximum(idx - 1, 0)[..., None], axis=-1)[..., 0],
+        0.0,
+    )
+    frac = jnp.clip(
+        (target[..., 0] - c_prev) / jnp.maximum(c_cur - c_prev, 1e-30), 0.0, 1.0
+    )
+    edges = sketch_bin_edges()
+    lo_e = edges[idx]
+    hi_e = edges[idx + 1]
+    val = lo_e + frac * (hi_e - lo_e)
     return jnp.where(total[..., 0] > 0, val, 0.0)
 
 
@@ -492,6 +578,38 @@ class Accumulator:
         """Structure-only state (for shard_map out_specs trees)."""
         raise NotImplementedError
 
+    def interval(
+        self,
+        state,
+        agg_kind: str,
+        moments: "StratumStats",
+        *,
+        q: float | None = None,
+        confidence: float = 0.95,
+        key=None,
+        replicates: int = 0,
+        grp=None,
+        num_groups: int = 1,
+        **aux,
+    ):
+        """Sampling-error CI ``(lo, hi)`` for aggregate ``agg_kind``
+        finalized from this state, or ``None`` when the kind carries no
+        bound logic (the engine falls back to a zero-width interval).
+
+        ``moments`` is the column's merged moment state — the
+        ``(n_k, N_k)`` expansion factors every bound needs (and the
+        mean/s² rows the bootstrap resamples).  ``key`` seeds the
+        bootstrap deterministically; ``replicates == 0`` disables
+        resampling-based bounds.  ``aux`` carries kind-specific extras the
+        engine forwards uniformly (e.g. ``sketch``/``center`` for the
+        moments kind) — implementations must tolerate and ignore extras
+        they don't use, so ``finalize`` can call any registered kind
+        through one signature.  Registered kinds own their bound logic
+        (see :mod:`.bounds`), and new kinds inherit the contract by
+        overriding this hook.
+        """
+        return None
+
 
 class MomentsAccumulator(Accumulator):
     """Eq 4 sample moments (:class:`StratumStats`), exact Chan merges."""
@@ -527,6 +645,47 @@ class MomentsAccumulator(Accumulator):
 
     def template(self):
         return StratumStats(*(0,) * 5)
+
+    def interval(self, state, agg_kind, moments, *, q=None, confidence=0.95,
+                 key=None, replicates=0, grp=None, num_groups=1, sketch=None,
+                 center=None, **aux):
+        """``var``: stratified parametric bootstrap over the moment rows
+        (singleton-guarded s², see :func:`guarded_s2`).
+
+        When the column *already ships* a quantile sketch (``sketch`` is
+        its state and ``center`` the plug-in point estimate), two free
+        sharpenings kick in with zero extra uplink: the sketch's
+        per-stratum kurtosis widens the s² spread beyond normal theory,
+        and a second, fully nonparametric CI is bootstrapped from the
+        collapsed bin replicates — the reported interval is the
+        conservative union of both channels.  Without a sketch the
+        normal-theory moment bootstrap stands alone (documented to
+        under-cover extremely heavy-tailed columns).
+        """
+        if agg_kind != "var" or key is None or replicates <= 0:
+            return None
+        from . import bounds  # deferred: bounds builds on this module
+
+        s2_eff, unidentified = guarded_s2(
+            state.n, state.total, state.m2, grp=grp, num_groups=num_groups
+        )
+        kurtosis = None
+        if sketch is not None:
+            kurtosis = bounds.sketch_kurtosis(sketch.bins, state.n)
+        k_mom, k_sk = jax.random.split(key)
+        lo, hi = bounds.var_interval(
+            k_mom, state.n, state.total, state.mean, s2_eff, confidence,
+            replicates, grp=grp, num_groups=num_groups, unidentified=unidentified,
+            kurtosis=kurtosis,
+        )
+        if sketch is not None and center is not None:
+            lo_s, hi_s = bounds.var_sketch_interval(
+                k_sk, sketch.bins, state.n, state.total, confidence, replicates,
+                center, grp=grp, num_groups=num_groups,
+            )
+            lo = jnp.minimum(lo, lo_s)
+            hi = jnp.maximum(hi, hi_s)
+        return lo, hi
 
 
 class ExtremaAccumulator(Accumulator):
@@ -570,6 +729,24 @@ class ExtremaAccumulator(Accumulator):
     def template(self):
         return Extrema(*(0,) * 2)
 
+    def interval(self, state, agg_kind, moments, *, q=None, confidence=0.95,
+                 key=None, replicates=0, grp=None, num_groups=1, **aux):
+        """``min``/``max``: closed-form order-statistic + Cantelli bounds
+        from the rank slack of per-stratum sampling fractions (no
+        resampling; deterministic)."""
+        if agg_kind not in ("min", "max"):
+            return None
+        from . import bounds  # deferred: bounds builds on this module
+
+        s2 = jnp.where(
+            moments.n > 1, moments.m2 / jnp.maximum(moments.n - 1.0, 1.0), 0.0
+        )
+        ext = state.max if agg_kind == "max" else state.min
+        return bounds.extrema_interval(
+            agg_kind, ext, moments.n, moments.total, moments.mean, s2,
+            confidence, grp=grp, num_groups=num_groups,
+        )
+
 
 class QuantileSketchAccumulator(Accumulator):
     """DDSketch-style mergeable log-histogram (see :class:`QuantileSketch`)."""
@@ -602,6 +779,19 @@ class QuantileSketchAccumulator(Accumulator):
 
     def template(self):
         return QuantileSketch(bins=0)
+
+    def interval(self, state, agg_kind, moments, *, q=None, confidence=0.95,
+                 key=None, replicates=0, grp=None, num_groups=1, **aux):
+        """``p<q>``: stratified multinomial bootstrap over the sketch bin
+        rows (Poissonized + CLT-collapsed, see :mod:`.bounds`)."""
+        if q is None or key is None or replicates <= 0:
+            return None
+        from . import bounds  # deferred: bounds builds on this module
+
+        return bounds.quantile_interval(
+            key, state.bins, moments.n, moments.total, q, confidence,
+            replicates, grp=grp, num_groups=num_groups,
+        )
 
 
 ACCUMULATORS: dict[str, Accumulator] = {}

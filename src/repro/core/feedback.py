@@ -59,8 +59,18 @@ def update(
     window_size: jnp.ndarray,
     slo: SLO,
 ) -> ControllerState:
-    """One controller step after a window's estimate is produced."""
-    re = jnp.where(jnp.isfinite(observed_re), observed_re, slo.target_relative_error)
+    """One controller step after a window's estimate is produced.
+
+    ``observed_re`` is whatever error-bounded aggregate drives the query —
+    the eq 10 RE for sum/mean or a bootstrap-CI RE for var/quantiles.
+    Non-finite observations (inf from an unidentified-variance window, NaN
+    from a degenerate upstream) are mapped to the target so they *hold*
+    the fraction instead of poisoning the EMA."""
+    re = jnp.where(
+        jnp.isfinite(observed_re) & (observed_re >= 0),
+        observed_re,
+        slo.target_relative_error,
+    )
     re_ema = jnp.where(
         state.steps == 0, re, slo.ema * re + (1.0 - slo.ema) * state.re_ema
     )
@@ -133,10 +143,16 @@ def update_vector(
     Identical math to :func:`update`, broadcast over the query axis; entries
     where ``active`` is False (queries that emitted no result this pane, or
     that have no error-bounded aggregate) keep their state unchanged and do
-    not advance ``steps``.  The latency budget caps each query's downstream
-    volume ``f·N`` independently (``cap=inf`` disables it elementwise).
+    not advance ``steps``.  Since the bounds subsystem, var- and
+    quantile-driven members feed their observed bootstrap-CI RE through
+    here like sum/mean members do; non-finite/NaN observations map to the
+    target (hold) instead of poisoning the EMA.  The latency budget caps
+    each query's downstream volume ``f·N`` independently (``cap=inf``
+    disables it elementwise).
     """
-    re = jnp.where(jnp.isfinite(observed_re), observed_re, slo.target)
+    re = jnp.where(
+        jnp.isfinite(observed_re) & (observed_re >= 0), observed_re, slo.target
+    )
     re_ema = jnp.where(state.steps == 0, re, slo.ema * re + (1.0 - slo.ema) * state.re_ema)
     f = state.fraction
     r = jnp.square(slo.target / jnp.maximum(re_ema, 1e-9))

@@ -332,7 +332,9 @@ class EdgeCloudPipeline:
                 plan, table, cfg, key, lat, lon, cols, valid, fraction, axes=axes
             )
             return QueryResult(
-                estimates=aqp.finalize(plan, table, stats),
+                # bounds are deterministic in the window key: fused sessions
+                # finalize the same stats with the same key bit-identically
+                estimates=aqp.finalize(plan, table, stats, key=key),
                 stats=stats,
                 n_sampled=n_sampled,
                 n_valid=n_valid,
@@ -475,8 +477,8 @@ class EdgeCloudPipeline:
         With ``query`` set this is a thin shim over a single-query
         :class:`~.session.StreamSession` (one registered tumbling
         one-pane query): the controller tracks the relative error of the
-        query's first *error-bounded* (sum/mean) aggregate — point-estimate
-        kinds report RE 0 and would collapse the fraction.  Grouped queries
+        query's first *error-bounded* aggregate (sum/mean/var/quantile —
+        exact count and one-sided min/max bounds don't drive it).  Grouped queries
         are driven by the worst group with a finite RE (empty groups report
         inf).  A query with no sum/mean aggregate keeps the fraction fixed.
         Register several queries on a session directly to share one

@@ -20,19 +20,31 @@ declarative bundle of aggregates over named value columns, and
 Both transmission modes produce identical estimates for the same sample,
 per aggregate kind (tested in ``tests/test_query.py``).
 
-Supported aggregate kinds and their error semantics:
+Supported aggregate kinds and their error semantics (every kind reports a
+``(ci_low, ci_high, relative_error)`` sampling-error interval, derived
+cloud-side from the shipped sufficient statistics — see :mod:`.bounds`):
 
-  sum / mean   stratified estimators with eq 5-10 variance / CI / MoE;
+  sum / mean   stratified estimators with eq 5-10 variance / CI / MoE
+               (lonely-singleton strata borrow spread, see
+               :func:`~.estimators.guarded_s2`);
   count        in-region population count — exact per window (population
                counts are observed, not sampled), MoE 0;
   var          plug-in population variance (within + between stratum
-               decomposition over the sample), reported as a point estimate;
-  min / max    sample extrema (point estimates; a sample extreme bounds the
-               population extreme from inside);
+               decomposition over the sample); CI from the stratified
+               parametric bootstrap over the merged moment rows;
+  min / max    sample extrema with one-sided order-statistic + Cantelli
+               bounds (a sample extreme bounds the population extreme
+               from inside; the rank slack of the per-stratum sampling
+               fractions bounds it from outside);
   p<q>         quantiles (``p50``, ``p99``, ``p99.9`` …) from the mergeable
                per-stratum log-histogram sketch, Horvitz-Thompson-expanded
-               per stratum at finalize; point estimates with the sketch's
-               documented ~4% relative value accuracy.
+               per stratum at finalize (~4% relative value accuracy); CI
+               from the collapsed stratified multinomial bootstrap over
+               the bin rows.
+
+Bounds of the resampling families are deterministic in the finalize PRNG
+key and sized by ``Query.bootstrap_replicates`` (0 disables them, falling
+back to zero-width point estimates).
 
 Each aggregate kind lowers to a set of **accumulator kinds** from the
 registry in :mod:`.estimators` (``moments`` | ``extrema`` | ``sketch`` |
@@ -120,6 +132,9 @@ class Query:
       confidence: CI level for the stratified estimators.
       method: EdgeSOS sampling method (``srs | bernoulli | neyman``).
       mode: edge->cloud transmission mode (``preagg | raw``).
+      bootstrap_replicates: replicate count of the stratified bootstrap
+        backing ``var``/``p<q>`` confidence intervals (0 disables the
+        bootstrap: those kinds report zero-width point estimates).
 
     Frozen and hashable, so a Query can key a compiled-executable cache.
     """
@@ -130,6 +145,7 @@ class Query:
     confidence: float = 0.95
     method: str = "srs"
     mode: str = "preagg"
+    bootstrap_replicates: int = 200
 
     def __post_init__(self):
         aggs = tuple(
@@ -155,6 +171,11 @@ class Query:
             )
         if self.mode not in ("preagg", "raw"):
             raise ValueError(f"unknown mode {self.mode!r}")
+        if not isinstance(self.bootstrap_replicates, int) or self.bootstrap_replicates < 0:
+            raise ValueError(
+                f"bootstrap_replicates must be a non-negative int; got "
+                f"{self.bootstrap_replicates!r}"
+            )
         if isinstance(self.roi, (list, tuple)):
             try:
                 (a, b), (c, d) = self.roi
@@ -416,13 +437,53 @@ def _gsum(x: jnp.ndarray, grp: jnp.ndarray, num: int) -> jnp.ndarray:
     return jax.ops.segment_sum(x, grp, num_segments=num + 1)[:num]
 
 
-def finalize(plan: Plan, table: StratumTable, stats: dict[str, dict]) -> dict:
+def _bounded_estimate(value, lo, hi, n_g, pop_g) -> AggEstimate:
+    """Assemble an AggEstimate from a point estimate and a (lo, hi) CI.
+
+    The interval is clamped to contain the point estimate; ``moe`` is the
+    larger half-width and ``relative_error`` its ratio to |value| (0 for an
+    exact zero-width interval, inf for an unbounded one or a zero value).
+    Infinite values (empty-group extrema identities) keep zero-width
+    intervals well-defined instead of producing inf - inf NaNs.  A group
+    with no sampled evidence (``n == 0``) reports an *infinite* relative
+    error — a zero-width interval around a vacuous point estimate is not
+    certainty, and a finite-looking RE of 0 would collapse the QoS
+    fraction exactly when the stream goes quiet."""
+    lo = jnp.minimum(lo, value)
+    hi = jnp.maximum(hi, value)
+    up = jnp.where(hi == value, 0.0, hi - value)
+    down = jnp.where(lo == value, 0.0, value - lo)
+    moe = jnp.maximum(up, down)
+    rel = jnp.where(
+        moe > 0,
+        jnp.where(
+            jnp.isfinite(value) & (jnp.abs(value) > 0),
+            moe / jnp.maximum(jnp.abs(value), 1e-30),
+            jnp.inf,
+        ),
+        jnp.zeros_like(moe),
+    )
+    rel = jnp.where(n_g > 0, rel, jnp.inf)
+    return AggEstimate(
+        value=value, moe=moe, ci_low=lo, ci_high=hi,
+        relative_error=rel, n=n_g, population=pop_g,
+    )
+
+
+def finalize(plan: Plan, table: StratumTable, stats: dict[str, dict], key=None) -> dict:
     """Cloud-side consolidation: merged accumulator states -> AggEstimates.
 
     This is the "local consolidation query" half of the split: it sees only
     per-stratum accumulator states (never raw tuples) — ``stats`` maps each
     column to its ``{kind: state}`` registry dict — and evaluates every
     AggSpec, grouping strata into the plan's result groups.
+
+    ``key`` seeds the stratified bootstrap behind ``var``/``p<q>``
+    confidence intervals (see :mod:`.bounds`); bounds are deterministic in
+    it, and ``None`` falls back to a fixed key.  Each registered
+    accumulator kind owns its bound logic via its ``interval`` hook, so
+    every aggregate reports a ``(ci_low, ci_high, relative_error)`` triple
+    with zero extra uplink bytes.
 
     For ``group_by=None`` the stratified sum/mean path evaluates
     :func:`estimators.estimate` on the moments state — the exact legacy
@@ -433,13 +494,18 @@ def finalize(plan: Plan, table: StratumTable, stats: dict[str, dict]) -> dict:
     num = plan.num_groups
     z = z_value(q.confidence)
     grp = _group_index(plan, table) if grouped else None
+    if key is None:
+        key = jax.random.key(0)
+    bkey = jax.random.fold_in(key, 0x626E64)  # "bnd": decorrelate from sampling
+    replicates = q.bootstrap_replicates
 
     out: dict[str, AggEstimate] = {}
     full_est: dict[str, estimators.Estimate] = {}
     zeroed = {c: estimators.zero_overflow_accs(stats[c]) for c in plan.columns}
-    for spec in q.aggs:
+    for i, spec in enumerate(q.aggs):
         accs = zeroed[spec.column]
         cs = accs["moments"]
+        akey = jax.random.fold_in(bkey, i)
         n, N = cs.n, cs.total
         active = (n > 0) & (N > 0)
         if grouped:
@@ -473,11 +539,13 @@ def finalize(plan: Plan, table: StratumTable, stats: dict[str, dict]) -> dict:
             else:
                 wb_g = jnp.sum(wb, axis=0)
             val = estimators.sketch_quantile(wb_g, qv)
-            zero = jnp.zeros_like(val)
-            out[spec.key] = AggEstimate(
-                value=val, moe=zero, ci_low=val, ci_high=val,
-                relative_error=zero, n=n_g, population=pop_g,
+            ci = estimators.accumulator("sketch").interval(
+                accs["sketch"], spec.kind, cs, q=qv, confidence=q.confidence,
+                key=akey, replicates=replicates, grp=grp, num_groups=num,
             )
+            if ci is None:
+                ci = (val, val)
+            out[spec.key] = _bounded_estimate(val, ci[0], ci[1], n_g, pop_g)
             continue
 
         if spec.kind in ("min", "max"):
@@ -488,11 +556,13 @@ def finalize(plan: Plan, table: StratumTable, stats: dict[str, dict]) -> dict:
                 val = seg(field, grp, num_segments=num + 1)[:num]
             else:
                 val = jnp.min(field) if spec.kind == "min" else jnp.max(field)
-            zero = jnp.zeros_like(val)
-            out[spec.key] = AggEstimate(
-                value=val, moe=zero, ci_low=val, ci_high=val,
-                relative_error=zero, n=n_g, population=pop_g,
+            ci = estimators.accumulator("extrema").interval(
+                ext, spec.kind, cs, confidence=q.confidence, key=akey,
+                replicates=replicates, grp=grp, num_groups=num,
             )
+            if ci is None:
+                ci = (val, val)
+            out[spec.key] = _bounded_estimate(val, ci[0], ci[1], n_g, pop_g)
             continue
 
         if not grouped and spec.kind in ("sum", "mean"):
@@ -523,28 +593,42 @@ def finalize(plan: Plan, table: StratumTable, stats: dict[str, dict]) -> dict:
         # segment-summed into groups (stratification is preserved inside
         # each group — a group is just a sub-population of strata).
         s2_k = jnp.where(n > 1, cs.m2 / jnp.maximum(n - 1.0, 1.0), 0.0)
+        # uncertainty terms use the singleton-guarded s² (lonely strata
+        # borrow their group's average spread; groups with no identified
+        # stratum report an infinite half-width instead of false-zero)
+        s2_eff, unident = estimators.guarded_s2(
+            n, N, cs.m2, grp=grp if grouped else None, num_groups=num
+        )
         fpc = jnp.where(N > 0, 1.0 - n / jnp.maximum(N, 1.0), 0.0)
         t_k = jnp.where(active, N * cs.mean, 0.0)  # per-stratum sum term
-        v_k = jnp.where(active, N * N * fpc * s2_k / jnp.maximum(n, 1.0), 0.0)
+        v_k = jnp.where(active, N * N * fpc * s2_eff / jnp.maximum(n, 1.0), 0.0)
         if grouped:
             sum_g = _gsum(t_k, grp, num)
             var_sum_g = _gsum(v_k, grp, num)
         else:
             sum_g = jnp.sum(t_k)
             var_sum_g = jnp.sum(v_k)
+        var_sum_g = jnp.where(unident, jnp.inf, var_sum_g)
         mean_g = sum_g / jnp.maximum(covered_g, 1.0)
 
         if spec.kind == "var":
             # plug-in population variance: E[y^2] - mean^2 with s2_k as the
-            # within-stratum second moment around the stratum mean.
+            # within-stratum second moment around the stratum mean (raw,
+            # not imputed: the guard shapes the CI, never the estimate).
             ey2_k = jnp.where(active, N * (s2_k + cs.mean * cs.mean), 0.0)
             ey2_g = _gsum(ey2_k, grp, num) if grouped else jnp.sum(ey2_k)
             val = jnp.maximum(ey2_g / jnp.maximum(covered_g, 1.0) - mean_g * mean_g, 0.0)
-            zero = jnp.zeros_like(val)
-            out[spec.key] = AggEstimate(
-                value=val, moe=zero, ci_low=val, ci_high=val,
-                relative_error=zero, n=n_g, population=pop_g,
+            # a sketch already shipped for this column (any quantile agg on
+            # it) sharpens the CI for free: kurtosis-widened s² spread plus
+            # a nonparametric bin-replicate channel, union'd conservatively
+            ci = estimators.accumulator("moments").interval(
+                cs, "var", cs, confidence=q.confidence, key=akey,
+                replicates=replicates, grp=grp, num_groups=num,
+                sketch=accs.get("sketch"), center=val,
             )
+            if ci is None:
+                ci = (val, val)
+            out[spec.key] = _bounded_estimate(val, ci[0], ci[1], n_g, pop_g)
             continue
 
         if spec.kind == "sum":

@@ -162,7 +162,23 @@ class StreamSession:
         """
         window = window or WindowSpec()
         plan = self.pipe.plan(query)
-        qos_key = next((a.key for a in query.aggs if a.kind in ("sum", "mean")), None)
+        # the first *error-bounded* aggregate drives QoS: sum/mean (eq 5-10
+        # CIs) and, since the bounds subsystem, var and p<q> quantiles —
+        # but only while their bootstrap is enabled (replicates > 0;
+        # disabled bounds report zero-width RE 0, which would collapse the
+        # fraction).  min/max report only conservative one-sided
+        # order-statistic bounds and count is exact — neither drives the
+        # controller.
+        boot_on = query.bootstrap_replicates > 0
+
+        def _drives(a) -> bool:
+            if a.kind in ("sum", "mean"):
+                return True
+            return boot_on and (
+                a.kind == "var" or aqp.quantile_of(a.kind) is not None
+            )
+
+        qos_key = next((a.key for a in query.aggs if _drives(a)), None)
         reg = Registration(
             qid=self._next_qid,
             query=query,
@@ -241,31 +257,35 @@ class StreamSession:
 
         if num_panes == 1:
 
-            def run(stats):
-                return aqp.finalize(plan, table, stats), stats
+            def run(stats, bkey):
+                return aqp.finalize(plan, table, stats, key=bkey), stats
 
         else:
 
-            def run(stacked):
+            def run(stacked, bkey):
                 merged = {
                     c: estimators.merge_accs_panes(stacked[c]) for c in plan.columns
                 }
-                return aqp.finalize(plan, table, merged), merged
+                return aqp.finalize(plan, table, merged, key=bkey), merged
 
         fn = jax.jit(run)
         self._finalizers[key] = fn
         return fn
 
-    def _emit(self, reg: Registration) -> QueryResult:
-        """Assemble this query's window from its pane ring and finalize."""
+    def _emit(self, reg: Registration, key) -> QueryResult:
+        """Assemble this query's window from its pane ring and finalize.
+
+        ``key`` (the step key) seeds the bootstrap error bounds: a
+        one-pane window finalizes with the same key as the shared pass, so
+        session bounds are bit-identical to an independent ``execute``."""
         panes = reg.ring
         if len(panes) == 1:
-            estimates, stats = self._finalize_fn(reg, 1)(panes[0].stats)
+            estimates, stats = self._finalize_fn(reg, 1)(panes[0].stats, key)
         else:
             stacked = jax.tree.map(
                 lambda *xs: jnp.stack(xs, axis=0), *[p.stats for p in panes]
             )
-            estimates, stats = self._finalize_fn(reg, len(panes))(stacked)
+            estimates, stats = self._finalize_fn(reg, len(panes))(stacked, key)
         n_sampled = panes[0].n_sampled
         n_valid = panes[0].n_valid
         n_overflow = panes[0].n_overflow
@@ -331,7 +351,7 @@ class StreamSession:
                 del reg.ring[: -reg.window.size]
                 reg.panes_seen += 1
                 if reg.panes_seen % reg.window.stride == 0:
-                    emitted[reg.qid] = self._emit(reg)
+                    emitted[reg.qid] = self._emit(reg, key)
         self._update_controllers(emitted)
         self.pane_index += 1
         self.total_comm_bytes += comm_total
@@ -365,8 +385,9 @@ class StreamSession:
     @staticmethod
     def _observed_re(reg: Registration, res: QueryResult) -> jnp.ndarray:
         """The scalar RE driving this query's controller entry: its first
-        error-bounded aggregate; grouped queries report the worst group with
-        a finite RE (all-empty groups -> inf, which holds the fraction)."""
+        error-bounded aggregate (sum/mean/var/quantile); grouped queries
+        report the worst group with a finite RE (all-empty or unidentified
+        groups -> inf, which holds the fraction)."""
         rel = jnp.asarray(res.estimates[reg.qos_key].relative_error)
         if rel.ndim:
             finite = jnp.isfinite(rel)

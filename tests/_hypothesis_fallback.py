@@ -74,7 +74,12 @@ def given(**strats):
     def deco(fn):
         def wrapper(*args, **kwargs):
             rng = np.random.default_rng(0)
-            for i in range(_EXAMPLES):
+            limit = getattr(
+                wrapper,
+                "_fallback_max_examples",
+                getattr(fn, "_fallback_max_examples", _EXAMPLES),
+            )
+            for i in range(limit):
                 drawn = {k: s.sample(rng, i) for k, s in strats.items()}
                 fn(*args, **kwargs, **drawn)
 
@@ -91,7 +96,14 @@ def given(**strats):
 
 
 def settings(*args, **kwargs):
+    # honor max_examples so expensive property tests (e.g. Monte-Carlo
+    # coverage sweeps) don't run the default 10 examples in fallback mode;
+    # works whether @settings sits above or below @given
+    max_examples = kwargs.get("max_examples")
+
     def deco(fn):
+        if max_examples is not None:
+            fn._fallback_max_examples = max_examples
         return fn
 
     return deco

@@ -10,7 +10,11 @@ N ∈ {1, 4, 16}, in wall time and edge->cloud collective bytes — and
 (e) the edge-reduce backend on a wide fusion group: the single-pass
 multi-column reduction (`backend="pallas"`) vs the per-column segment
 path, for 4- and 8-column groups, plus the quantile-sketch query cost and
-the bootstrap error-bounds finalize overhead.
+the bootstrap error-bounds finalize overhead — and (f) the session
+refinements: a mixed-fraction fusion group's downstream-bytes reduction
+(the low-fraction member pays its own nested subsample, not the group
+max) and the one-pass speedup of cross-signature Bernoulli fusion over
+the one-pass-per-ROI-group behavior it replaces.
 
 ``--json PATH`` runs a fixed small configuration and writes the metrics
 CI's regression gate consumes (``benchmarks/regression.py``).
@@ -139,6 +143,55 @@ def run():
             f"window={WINDOW};cols={ncols}",
         )
 
+    # per-query fraction refinement: a mixed-fraction fusion group refines
+    # each member to its own fraction — the low-fraction member's downstream
+    # volume shrinks by ~f_hi/f_lo instead of paying the group max
+    for name, (f_lo, f_hi) in (("mixed_10_80", (0.1, 0.8)), ("shared_80_80", (0.8, 0.8))):
+        sess_mix = StreamSession(pipe)
+        r_lo = sess_mix.register(
+            Query(aggs=(AggSpec("mean", "value"),)), initial_fraction=f_lo
+        )
+        r_hi = sess_mix.register(
+            Query(aggs=(AggSpec("mean", "occupancy", name="occ"),)), initial_fraction=f_hi
+        )
+        us_mix = time_call(sess_mix.step, key, win)
+        lo_b, hi_b = r_lo.downstream_bytes, r_hi.downstream_bytes
+        yield csv_line(
+            f"query_bench/refined_{name}", us_mix,
+            f"window={WINDOW};fractions={f_lo}/{f_hi};"
+            f"downstream_lo={lo_b};downstream_hi={hi_b};"
+            f"lo_reduction={hi_b / max(lo_b, 1):.2f}x",
+        )
+
+    # cross-signature Bernoulli fusion: two differing-ROI Bernoulli queries
+    # share ONE edge pass vs the PR4 behavior of one pass per ROI group
+    roi_s = ((22.45, 22.66), (113.76, 114.64))
+    roi_n = ((22.64, 22.86), (113.76, 114.64))
+    qb = [
+        Query(aggs=(AggSpec("mean", "value", name=f"b{i}"),), method="bernoulli", roi=roi)
+        for i, roi in enumerate((roi_s, roi_n))
+    ]
+    sess_x = StreamSession(pipe, initial_fraction=FRACTION)
+    for q in qb:
+        sess_x.register(q)
+    separate = [StreamSession(pipe, initial_fraction=FRACTION) for _ in qb]
+    for s, q in zip(separate, qb):
+        s.register(q)
+
+    def one_pass():
+        return sess_x.step(key, win)
+
+    def two_passes():
+        return [s.step(key, win) for s in separate]
+
+    us_one = time_call(one_pass)
+    us_two = time_call(two_passes)
+    yield csv_line(
+        "query_bench/bernoulli_cross_roi_fused", us_one,
+        f"window={WINDOW};rois=2;passes={len(sess_x._groups())};"
+        f"vs_separate_groups={us_two / max(us_one, 1e-9):.2f}x",
+    )
+
     # quantile aggregates: the sketch's accumulate+finalize cost on top of
     # the same pass (p50/p99 over one column)
     q_quant = Query(aggs=(AggSpec("mean", "value"), AggSpec("p50", "value"), AggSpec("p99", "value")))
@@ -200,6 +253,37 @@ def small_metrics(window: int = 20_000, n_queries: int = 4, fraction: float = FR
     )
     q_bounds = Query(aggs=(AggSpec("var", "value"), AggSpec("p99", "value")))
     us_bounds = time_call(pipe.execute, q_bounds, key, win, fraction)
+
+    # per-query fraction refinement: the low-fraction member of a 0.1/0.8
+    # group pays ~1/8 the downstream volume of the max member (PR4 charged
+    # both the max) — a near-deterministic ratio, gated in baselines.json
+    sess_mix = StreamSession(pipe)
+    r_lo = sess_mix.register(
+        Query(aggs=(AggSpec("mean", "value"),)), initial_fraction=0.1
+    )
+    r_hi = sess_mix.register(
+        Query(aggs=(AggSpec("mean", "occupancy", name="occ"),)), initial_fraction=0.8
+    )
+    sess_mix.step(key, win)
+    refined_ratio = r_hi.downstream_bytes / max(r_lo.downstream_bytes, 1)
+
+    # cross-signature Bernoulli fusion: one pass for two differing ROIs vs
+    # the PR4 one-pass-per-ROI-group behavior (same-machine A/B speedup)
+    roi_s = ((22.45, 22.66), (113.76, 114.64))
+    roi_n = ((22.64, 22.86), (113.76, 114.64))
+    qb = [
+        Query(aggs=(AggSpec("mean", "value", name=f"b{i}"),), method="bernoulli", roi=roi)
+        for i, roi in enumerate((roi_s, roi_n))
+    ]
+    sess_x = StreamSession(pipe, initial_fraction=fraction)
+    for q in qb:
+        sess_x.register(q)
+    separate = [StreamSession(pipe, initial_fraction=fraction) for _ in qb]
+    for s, q in zip(separate, qb):
+        s.register(q)
+    us_one = time_call(lambda: sess_x.step(key, win))
+    us_two = time_call(lambda: [s.step(key, win) for s in separate])
+
     return {
         "config": {
             "window": window,
@@ -214,6 +298,12 @@ def small_metrics(window: int = 20_000, n_queries: int = 4, fraction: float = FR
         f"independent_uplink_bytes_n{n_queries}": indep_bytes,
         f"uplink_ratio_n{n_queries}": indep_bytes / max(fused_bytes, 1),
         "bounds_var_p99_us": us_bounds,
+        "refined_downstream_ratio": refined_ratio,
+        "refined_downstream_bytes_lo": r_lo.downstream_bytes,
+        "refined_downstream_bytes_hi": r_hi.downstream_bytes,
+        "bernoulli_cross_roi_fused_us": us_one,
+        "bernoulli_cross_roi_separate_us": us_two,
+        "bernoulli_cross_roi_speedup": us_two / max(us_one, 1e-9),
     }
 
 

@@ -1,0 +1,94 @@
+"""CI benchmark trend history: append each run's metrics to a persisted
+JSON series.
+
+The regression gate (``benchmarks/regression.py``) is a *point* check
+against committed baselines; this module turns the same measured JSONs
+into a *trend*: every CI run on ``main`` appends one entry — commit sha,
+run id, wall-clock, and the full metrics dict of each ``BENCH_*.json`` —
+to a history file that lives on the ``gh-pages`` branch (see the
+``bench`` job in ``.github/workflows/ci.yml``).  The file is plain JSON
+(``{"version": 1, "runs": [...]}``, newest last), so a static chart page
+or a one-liner ``jq`` can plot any gated ratio over time.
+
+Usage:
+    python -m benchmarks.trend BENCH_query.json BENCH_kernel.json \
+        --history bench-history.json [--sha SHA] [--run RUN_ID] \
+        [--max-runs 2000]
+
+Append is idempotent per (sha, run): re-running the same CI job replaces
+its own entry instead of duplicating it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+HISTORY_VERSION = 1
+DEFAULT_MAX_RUNS = 2000
+
+
+def _load_history(path: str) -> dict:
+    if not os.path.exists(path):
+        return {"version": HISTORY_VERSION, "runs": []}
+    with open(path) as f:
+        history = json.load(f)
+    version = history.get("version")
+    if version != HISTORY_VERSION:
+        raise SystemExit(
+            f"{path}: unsupported trend-history version {version!r} "
+            f"(this tool writes version {HISTORY_VERSION})"
+        )
+    return history
+
+
+def append(
+    measured_paths,
+    history_path: str,
+    sha: str = "",
+    run_id: str = "",
+    timestamp: float | None = None,
+    max_runs: int = DEFAULT_MAX_RUNS,
+) -> dict:
+    """Append one run's measured JSONs to the history file; returns the
+    updated history dict.  Keeps at most ``max_runs`` newest entries so the
+    gh-pages artifact stays bounded."""
+    history = _load_history(history_path)
+    entry = {
+        "sha": sha,
+        "run": run_id,
+        "timestamp": time.time() if timestamp is None else float(timestamp),
+        "metrics": {},
+    }
+    for path in measured_paths:
+        with open(path) as f:
+            entry["metrics"][os.path.basename(path)] = json.load(f)
+    runs = [r for r in history["runs"] if not (sha and r.get("sha") == sha and r.get("run") == run_id)]
+    runs.append(entry)
+    history["runs"] = runs[-max_runs:]
+    with open(history_path, "w") as f:
+        json.dump(history, f, indent=1, sort_keys=True)
+    return history
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("measured", nargs="+", help="measured BENCH_*.json files")
+    ap.add_argument("--history", required=True, help="trend-history JSON to append to")
+    ap.add_argument("--sha", default=os.environ.get("GITHUB_SHA", ""))
+    ap.add_argument("--run", default=os.environ.get("GITHUB_RUN_ID", ""))
+    ap.add_argument("--max-runs", type=int, default=DEFAULT_MAX_RUNS)
+    args = ap.parse_args()
+    history = append(
+        args.measured, args.history, sha=args.sha, run_id=args.run, max_runs=args.max_runs
+    )
+    print(
+        f"{args.history}: {len(history['runs'])} run(s), appended "
+        f"{args.sha[:12] or '<local>'} with {sorted(history['runs'][-1]['metrics'])}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""Fault-tolerant sessions: per-query fractions + mid-window restore.
+
+Registers two queries at deliberately divergent fractions — the fused
+group refines each member to its *own* fraction via nested HT subsampling
+(the 10% query pays ~1/8 the downstream volume of the 80% one) — plus a
+differing-ROI Bernoulli pair served by ONE cross-signature pass.  Halfway
+through the stream the session is checkpointed and "crashes"; a fresh
+session re-registers the same queries, restores the snapshot, and resumes
+mid-sliding-window with bit-identical estimates (verified against an
+uninterrupted run).
+
+Run:  PYTHONPATH=src python examples/checkpoint_restore.py
+"""
+
+import os
+import tempfile
+
+import numpy as np
+
+import jax
+
+from repro.core import (
+    SHENZHEN_BBOX,
+    AggSpec,
+    EdgeCloudPipeline,
+    Query,
+    StreamSession,
+    WindowSpec,
+    make_table,
+    windows,
+)
+from repro.data.streams import shenzhen_taxi_stream
+
+PANE = 10_000
+N_PANES = 8
+CUT = 4
+
+ROI_SOUTH = ((22.45, 22.66), (113.76, 114.64))
+ROI_NORTH = ((22.64, 22.86), (113.76, 114.64))
+
+
+def build_session(pipe):
+    sess = StreamSession(pipe)
+    regs = {
+        "cheap": sess.register(
+            Query(aggs=(AggSpec("mean", "value"),)),
+            initial_fraction=0.1,
+            window=WindowSpec("sliding", size=3),
+        ),
+        "precise": sess.register(
+            Query(aggs=(AggSpec("mean", "value", name="precise_mean"),)),
+            initial_fraction=0.8,
+            window=WindowSpec("sliding", size=3),
+        ),
+        "south": sess.register(
+            Query(aggs=(AggSpec("mean", "value", name="south"),),
+                  method="bernoulli", roi=ROI_SOUTH),
+        ),
+        "north": sess.register(
+            Query(aggs=(AggSpec("mean", "occupancy", name="north"),),
+                  method="bernoulli", roi=ROI_NORTH),
+        ),
+    }
+    return sess, regs
+
+
+def main():
+    table = make_table(*SHENZHEN_BBOX, precision=5)
+    pipe = EdgeCloudPipeline(table)
+    stream = shenzhen_taxi_stream(num_chunks=4, seed=0)
+    panes = list(windows.count_windows(stream, PANE))[:N_PANES]
+    root = jax.random.key(0)
+
+    sess, regs = build_session(pipe)
+    print(f"{len(regs)} queries, {len(sess._groups())} fusion groups "
+          "(srs pair refined per-fraction, bernoulli pair fused cross-ROI)\n")
+
+    ckpt_path = os.path.join(tempfile.mkdtemp(), "session.npz")
+    for i in range(CUT):
+        sess.step(jax.random.fold_in(root, i), panes[i])
+        sess.checkpoint(ckpt_path)
+    print(f"pane {CUT - 1}: checkpointed to {ckpt_path} "
+          f"({os.path.getsize(ckpt_path):,d} B) — simulating a crash\n")
+    kept = {n: (r.qid, r.downstream_bytes) for n, r in regs.items()}
+    del sess, regs
+
+    sess2, regs2 = build_session(pipe)  # fresh process: re-register, restore
+    sess2.restore(ckpt_path)
+    for name, (qid, down) in kept.items():
+        assert regs2[name].qid == qid and regs2[name].downstream_bytes == down
+    print(f"restored at pane_index={sess2.pane_index}; "
+          f"downstream so far: cheap {regs2['cheap'].downstream_bytes:,d} B vs "
+          f"precise {regs2['precise'].downstream_bytes:,d} B "
+          f"({regs2['precise'].downstream_bytes / regs2['cheap'].downstream_bytes:.1f}x)\n")
+
+    # uninterrupted reference for the resumed half
+    ref_sess, ref_regs = build_session(pipe)
+    for i in range(N_PANES):
+        ref_step = ref_sess.step(jax.random.fold_in(root, i), panes[i])
+    for i in range(CUT, N_PANES):
+        step = sess2.step(jax.random.fold_in(root, i), panes[i])
+        cheap = step.results[regs2["cheap"].qid].estimates["mean_value"]
+        precise = step.results[regs2["precise"].qid].estimates["precise_mean"]
+        print(f"pane {i}: cheap {float(cheap.value):6.3f} ±{float(cheap.moe):.3f} "
+              f"(n={int(cheap.n)})   precise {float(precise.value):6.3f} "
+              f"±{float(precise.moe):.3f} (n={int(precise.n)})")
+    for name in regs2:
+        a = ref_step.results[ref_regs[name].qid].estimates
+        b = step.results[regs2[name].qid].estimates
+        for k in a:
+            np.testing.assert_array_equal(np.asarray(a[k].value), np.asarray(b[k].value))
+            np.testing.assert_array_equal(np.asarray(a[k].moe), np.asarray(b[k].moe))
+    print("\nresumed run is bit-identical to the uninterrupted session "
+          "(values AND intervals) — windows survive the restart.")
+
+
+if __name__ == "__main__":
+    main()

@@ -22,8 +22,14 @@ Layers (bottom-up):
                 finalize, in pre-aggregated or raw transmission mode
   session     — the continuous-query engine: ``StreamSession`` registers
                 any number of queries (each with an SLO and WindowSpec),
-                serves each fusion group with one sampling pass per pane,
-                and merges pane accumulators into sliding/hopping windows
+                serves each fusion group with one sampling pass per pane
+                (nested HT subsampling refines the shared sample to each
+                member's own fraction; differing-ROI Bernoulli queries
+                fuse cross-signature), and merges pane accumulators into
+                sliding/hopping windows
+  checkpoint  — pane checkpoint/restore: versioned session snapshots
+                (rings + controller slices + drop counters) that resume a
+                restarted session mid-window bit-identically
 
 Typical use::
 
@@ -41,7 +47,7 @@ The legacy ``pipe.process_window(...)`` single-estimate API remains as a
 shim over the canonical ``SUM/MEAN(value)`` query.
 """
 
-from . import bounds, estimators, feedback, geohash, query, routing, sampling, session, stratify, windows
+from . import bounds, checkpoint, estimators, feedback, geohash, query, routing, sampling, session, stratify, windows
 from .estimators import (
     Accumulator,
     ColumnStats,
@@ -108,6 +114,7 @@ __all__ = [
     "accumulator",
     "balanced_plan",
     "bounds",
+    "checkpoint",
     "column_stats",
     "compact",
     "contiguous_plan",

@@ -63,6 +63,15 @@ are deterministic in the PRNG key, and are continuous in the merged
 statistics — so preagg/raw modes and fused sessions produce matching
 bounds for the same sample (property-tested).
 
+Every family reads the sampling fraction *only* through the realized
+per-stratum ``(n_k, N_k)`` rows, never through a nominal fraction knob —
+so when a fused session refines a member's shared sample down to its own
+fraction (nested HT subsampling, see :mod:`.session`), the member's
+intervals automatically reflect its **effective** fraction: a 10%-fraction
+member fused with an 80% one reports honest 10% widths, which widen
+monotonically as the refined fraction shrinks (property-tested in
+``tests/test_subsampling.py``).
+
 Grouped queries reuse the same code paths: every function takes an
 optional ``grp`` stratum→group index (overflow slot mapping to a discarded
 trailing group) and a static ``num_groups``.

@@ -1,0 +1,226 @@
+"""Pane checkpoint/restore: restart-safe continuous-query sessions.
+
+Edge nodes fail and restart; the paper's continuous queries must not lose
+their open sliding windows when they do.  A :class:`~.session.StreamSession`
+is resumable from a tiny snapshot because every window is assembled from
+*mergeable per-stratum accumulator states* — the pane rings are
+O(S · columns) floats per pane, the controller slice is three scalars per
+query, and nothing else in the session is stateful.  This module
+serializes exactly that:
+
+  * per registration: the pane ring (each pane's ``{column: {kind:
+    state}}`` registry pytree + its counters), the controller slice
+    (``fraction``/``re_ema``/``steps``), ``panes_seen`` (window emission
+    phase), and the downstream-volume counter;
+  * per session: ``pane_index`` and the ``total_comm_bytes`` /
+    ``total_dropped`` / ``total_passes`` diagnostics — so
+    ``WindowBatch.n_dropped`` accounting survives a restore boundary.
+
+Snapshots are **versioned** plain dicts of numpy arrays and Python
+scalars (no pickling): :func:`save` / :func:`load` round-trip them through
+a single ``.npz`` file whose scalar schema rides in an embedded JSON
+header.  Restoration is **bit-exact**: f32 ring leaves round-trip
+losslessly through numpy, controller floats through JSON's shortest-repr
+floats, so a restored session's subsequent estimates, intervals, and drop
+accounting are bit-identical to a session that never restarted (given the
+same per-pane PRNG keys — key discipline stays with the driver).
+
+Queries themselves are *not* serialized (they are code): the restoring
+process re-registers the same queries in the same order, and
+:func:`restore` validates each registration against a stored fingerprint
+of its query + window spec before touching any state.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+import jax.numpy as jnp
+
+from . import estimators
+
+SNAPSHOT_VERSION = 1
+
+_COUNTER_FIELDS = ("n_sampled", "n_valid", "n_overflow", "n_truncated")
+
+
+def _fingerprint(reg) -> str:
+    """Stable identity of a registration: its query spec + window shape.
+
+    ``Query``/``WindowSpec`` are frozen dataclasses of primitives, so their
+    reprs are deterministic across processes; the plan is derived from the
+    query, so it needs no fingerprint of its own.
+    """
+    return f"{reg.query!r}|{reg.window!r}"
+
+
+def _ring_structure(plan):
+    """The treedef a registration's pane stats must match (dict keys are
+    flattened in sorted order by jax, so leaf order is canonical)."""
+    kinds_map = plan.column_kind_map
+    template = {c: estimators.accs_template(kinds_map[c]) for c in plan.columns}
+    return jax.tree.structure(template)
+
+
+def snapshot(sess) -> dict:
+    """Capture a session's resumable state as a versioned pytree of numpy
+    arrays + Python scalars (see module docstring for the schema)."""
+    regs = []
+    for reg in sess.registrations:
+        ring = []
+        for p in reg.ring:
+            ring.append(
+                {
+                    "leaves": [np.asarray(x) for x in jax.tree.leaves(p.stats)],
+                    "counters": {
+                        f: int(getattr(p, f)) for f in _COUNTER_FIELDS
+                    },
+                    "n_dropped": int(p.n_dropped),
+                    "comm_bytes": int(p.comm_bytes),
+                }
+            )
+        regs.append(
+            {
+                "fingerprint": _fingerprint(reg),
+                "fraction": float(reg.fraction),
+                "re_ema": float(reg.re_ema),
+                "steps": int(reg.steps),
+                "panes_seen": int(reg.panes_seen),
+                "downstream_tuples": int(reg.downstream_tuples),
+                "ring": ring,
+            }
+        )
+    return {
+        "version": SNAPSHOT_VERSION,
+        "pane_index": int(sess.pane_index),
+        "total_comm_bytes": int(sess.total_comm_bytes),
+        "total_dropped": int(sess.total_dropped),
+        "total_passes": int(sess.total_passes),
+        "registrations": regs,
+    }
+
+
+def restore(sess, snap) -> None:
+    """Load ``snap`` (a snapshot dict or an ``.npz`` path) into ``sess``.
+
+    ``sess`` must carry the same registrations, in the same order, as the
+    session the snapshot was taken from (fingerprint-validated).  Raises
+    ``ValueError`` on a version, registration, or ring-shape mismatch
+    before mutating any state.
+    """
+    from .session import _Pane  # session imports checkpoint lazily
+
+    if not isinstance(snap, dict):
+        snap = load(snap)
+    version = snap.get("version")
+    if version != SNAPSHOT_VERSION:
+        raise ValueError(
+            f"unsupported session snapshot version {version!r}; this build "
+            f"reads version {SNAPSHOT_VERSION}"
+        )
+    regs = list(sess.registrations)
+    stored = snap["registrations"]
+    if len(regs) != len(stored):
+        raise ValueError(
+            f"snapshot holds {len(stored)} registrations but the session has "
+            f"{len(regs)}; re-register the original query set before restoring"
+        )
+    rebuilt = []
+    for reg, rec in zip(regs, stored):
+        fp = _fingerprint(reg)
+        if rec["fingerprint"] != fp:
+            raise ValueError(
+                f"registration {reg.qid} does not match the snapshot: "
+                f"expected {rec['fingerprint']}, session has {fp}"
+            )
+        structure = _ring_structure(reg.plan)
+        ring = []
+        for p in rec["ring"]:
+            if len(p["leaves"]) != structure.num_leaves:
+                raise ValueError(
+                    f"registration {reg.qid}: pane has {len(p['leaves'])} "
+                    f"state leaves, plan expects {structure.num_leaves}"
+                )
+            stats = jax.tree.unflatten(
+                structure, [jnp.asarray(x) for x in p["leaves"]]
+            )
+            ring.append(
+                _Pane(
+                    stats=stats,
+                    n_dropped=int(p["n_dropped"]),
+                    comm_bytes=int(p["comm_bytes"]),
+                    **{f: jnp.int32(p["counters"][f]) for f in _COUNTER_FIELDS},
+                )
+            )
+        rebuilt.append(ring)
+    # validation passed for every registration: commit
+    for reg, rec, ring in zip(regs, stored, rebuilt):
+        reg.fraction = float(rec["fraction"])
+        reg.re_ema = float(rec["re_ema"])
+        reg.steps = int(rec["steps"])
+        reg.panes_seen = int(rec["panes_seen"])
+        reg.downstream_tuples = int(rec["downstream_tuples"])
+        reg.ring = ring
+    sess.pane_index = int(snap["pane_index"])
+    sess.total_comm_bytes = int(snap["total_comm_bytes"])
+    sess.total_dropped = int(snap["total_dropped"])
+    sess.total_passes = int(snap["total_passes"])
+
+
+def save(snap: dict, path) -> None:
+    """Persist a snapshot as one ``.npz``: ring leaves as arrays, every
+    scalar in an embedded JSON header (no pickling anywhere).
+
+    The write is **atomic** (temp file + ``os.replace``): checkpointing
+    every pane over the same path must never truncate the last good
+    snapshot if the node dies mid-write — that crash is exactly the event
+    this module exists to survive."""
+    arrays: dict[str, np.ndarray] = {}
+    meta = {k: v for k, v in snap.items() if k != "registrations"}
+    meta_regs = []
+    for i, rec in enumerate(snap["registrations"]):
+        ring_meta = []
+        for j, p in enumerate(rec["ring"]):
+            for k, leaf in enumerate(p["leaves"]):
+                arrays[f"r{i}.p{j}.l{k}"] = np.asarray(leaf)
+            ring_meta.append(
+                {
+                    "num_leaves": len(p["leaves"]),
+                    "counters": p["counters"],
+                    "n_dropped": p["n_dropped"],
+                    "comm_bytes": p["comm_bytes"],
+                }
+            )
+        meta_regs.append({**{k: v for k, v in rec.items() if k != "ring"}, "ring": ring_meta})
+    meta["registrations"] = meta_regs
+    arrays["__meta__"] = np.frombuffer(json.dumps(meta).encode("utf-8"), np.uint8)
+    tmp = f"{path}.tmp"
+    with open(tmp, "wb") as f:
+        np.savez_compressed(f, **arrays)
+    os.replace(tmp, path)
+
+
+def load(path) -> dict:
+    """Read a snapshot written by :func:`save` back into its dict form."""
+    with np.load(path) as npz:
+        meta = json.loads(bytes(npz["__meta__"].tobytes()).decode("utf-8"))
+        regs = []
+        for i, rec in enumerate(meta["registrations"]):
+            ring = []
+            for j, p in enumerate(rec["ring"]):
+                ring.append(
+                    {
+                        "leaves": [
+                            npz[f"r{i}.p{j}.l{k}"] for k in range(p["num_leaves"])
+                        ],
+                        "counters": p["counters"],
+                        "n_dropped": p["n_dropped"],
+                        "comm_bytes": p["comm_bytes"],
+                    }
+                )
+            regs.append({**{k: v for k, v in rec.items() if k != "ring"}, "ring": ring})
+    return {**{k: v for k, v in meta.items() if k != "registrations"}, "registrations": regs}

@@ -149,6 +149,13 @@ def update_vector(
     target (hold) instead of poisoning the EMA.  The latency budget caps
     each query's downstream volume ``f·N`` independently (``cap=inf``
     disables it elementwise).
+
+    Under per-query fraction refinement (nested subsampling in the session
+    layer) each entry's observed RE comes from its *own* effective
+    fraction rather than the fusion-group max, so the controller's
+    ``RE² ∝ (1-f)/f`` model sees consistent (f, RE) pairs and divergent
+    members converge to their own targets instead of free-riding the
+    group's tightest SLO.
     """
     re = jnp.where(
         jnp.isfinite(observed_re) & (observed_re >= 0), observed_re, slo.target

@@ -212,7 +212,6 @@ def _edge_program(
     sidx, sample = edge_sample(
         key, table, lat, lon, ok, fraction, q.method, backend=cfg.backend
     )
-    n_truncated = jnp.int32(0)
     if q.mode == "raw":
         cap = cfg.raw_capacity or lat.shape[0]
         packed = sampling.compact(
@@ -232,28 +231,131 @@ def _edge_program(
             plan, cfg, gathered, v_sidx, v_ok, table.num_slots, counts
         )
         comm = jnp.int32(aqp.raw_bytes(plan, cap))
-    else:
-        stats = _accumulate_columns(
-            plan, cfg, cols, sidx, sample.mask, table.num_slots, sample.counts
-        )
+        n_sampled = jnp.sum(sample.mask.astype(jnp.int32))
+        n_valid = jnp.sum(ok.astype(jnp.int32))
+        n_overflow = sample.counts[-1] + jnp.sum((valid & ~ok).astype(jnp.int32))
         if axes is not None:
-            merged: dict = {}
-            shared = None
-            for c in plan.columns:
-                merged[c] = estimators.psum_accs(stats[c], axes, shared=shared)
-                # n/total identical across columns: psum them only once
-                shared = shared if shared is not None else merged[c]["moments"]
-            stats = merged
+            n_sampled = jax.lax.psum(n_sampled, axes)
+            n_valid = jax.lax.psum(n_valid, axes)
+            n_overflow = jax.lax.psum(n_overflow, axes)
+            n_truncated = jax.lax.psum(n_truncated, axes)
+    else:
+        stats, n_sampled, n_valid, n_overflow = _member_reduce(
+            plan, table, cfg, cols, sidx, sample.mask, ok, valid, sample.counts, axes
+        )
+        n_truncated = jnp.int32(0)
         comm = jnp.int32(aqp.preagg_bytes(plan, table.num_slots))
-    n_sampled = jnp.sum(sample.mask.astype(jnp.int32))
+    return stats, n_sampled, n_valid, n_overflow, n_truncated, comm
+
+
+def _member_reduce(
+    plan: Plan, table: StratumTable, cfg: PipelineConfig, cols, sidx, mask, ok,
+    valid, counts, axes,
+):
+    """One plan's preagg reduce + consolidate + counters for a given sample.
+
+    The canonical implementation shared by :func:`_edge_program`'s preagg
+    branch and the refined fused pass (:func:`_fused_edge_program`): a
+    refined member whose mask equals its independent draw gets bit-identical
+    states *by construction*, because both paths run this exact program."""
+    stats = _accumulate_columns(plan, cfg, cols, sidx, mask, table.num_slots, counts)
+    if axes is not None:
+        merged: dict = {}
+        shared = None
+        for c in plan.columns:
+            merged[c] = estimators.psum_accs(stats[c], axes, shared=shared)
+            shared = shared if shared is not None else merged[c]["moments"]
+        stats = merged
+    n_sampled = jnp.sum(mask.astype(jnp.int32))
     n_valid = jnp.sum(ok.astype(jnp.int32))
-    n_overflow = sample.counts[-1] + jnp.sum((valid & ~ok).astype(jnp.int32))
+    n_overflow = counts[-1] + jnp.sum((valid & ~ok).astype(jnp.int32))
     if axes is not None:
         n_sampled = jax.lax.psum(n_sampled, axes)
         n_valid = jax.lax.psum(n_valid, axes)
         n_overflow = jax.lax.psum(n_overflow, axes)
-        n_truncated = jax.lax.psum(n_truncated, axes)
-    return stats, n_sampled, n_valid, n_overflow, n_truncated, comm
+    return stats, n_sampled, n_valid, n_overflow
+
+
+def _fused_edge_program(
+    fused: aqp.FusedPlan,
+    table: StratumTable,
+    cfg: PipelineConfig,
+    key,
+    lat,
+    lon,
+    cols: Mapping[str, jnp.ndarray],
+    valid,
+    fractions,
+    axes=None,
+):
+    """The *refined* fused edge pass: per-member nested samples from ONE
+    shared stratify + randomness draw (preagg mode only).
+
+    Where :func:`_edge_program` serves a whole fusion group from a single
+    union accumulation at the group-max fraction, this program thins the
+    shared sample to each member's **own** fraction — and, for Bernoulli
+    groups, applies each member's **own** ROI as an accumulation mask —
+    producing one ``{column: {kind: state}}`` pytree per member:
+
+      * ``srs`` groups share the per-stratum random ranks
+        (:func:`~.sampling.srs_ranks`): member m keeps
+        ``ranks < n_k(fractions[m])``, which is *exactly* the SRS its
+        independent ``execute`` would draw for the same key, and a subset
+        of the group-max sample (nested Horvitz-Thompson subsampling — the
+        estimators and :mod:`.bounds` intervals then reflect the member's
+        effective fraction through the realized ``n_k``).  ``neyman`` is
+        refused (its variance-optimal allocation needs per-stratum stddev
+        threading; silently substituting proportional allocation would
+        change the sampling design) — neyman groups stay on the shared
+        group-max pass.
+      * ``bernoulli`` groups share one per-tuple uniform draw: member m
+        keeps ``u < fractions[m]`` within its own ROI.  Uniforms are
+        stratum- and fraction-independent, so differing-ROI members fuse
+        into this one pass (cross-signature fusion) and every member's
+        sample is bit-identical to its independent draw.
+
+    Returns ``(members_out, comm)`` with ``members_out[m] = (stats,
+    n_sampled, n_valid, n_overflow)``.
+    """
+    shared = fused.shared
+    q = shared.query
+    if q.method not in ("srs", "bernoulli"):
+        raise NotImplementedError(
+            f"refined fused pass supports srs|bernoulli members, not "
+            f"{q.method!r}; neyman allocation needs per-stratum stddev "
+            "threading (its group keeps the shared group-max pass)"
+        )
+    if axes is not None:
+        key = jax.random.fold_in(key, jax.lax.axis_index(axes))
+    slots = table.num_slots
+    sidx_raw = table.assign(lat, lon, backend=cfg.backend)
+    members_out = []
+    if q.method == "bernoulli":
+        u = jax.random.uniform(key, lat.shape)
+        for m, plan_m in enumerate(fused.members):
+            ok = valid & aqp.roi_mask(plan_m, table, lat, lon)
+            sidx = jnp.where(ok, sidx_raw, table.num_strata)
+            mask = (u < fractions[m]) & ok
+            counts = jax.ops.segment_sum(
+                ok.astype(jnp.int32), sidx, num_segments=slots
+            )
+            members_out.append(
+                _member_reduce(plan_m, table, cfg, cols, sidx, mask, ok, valid, counts, axes)
+            )
+    else:
+        ok = valid & aqp.roi_mask(shared, table, lat, lon)
+        sidx = jnp.where(ok, sidx_raw, table.num_strata)
+        ranks, counts_all = sampling.srs_ranks(key, sidx, slots)
+        counts = jax.ops.segment_sum(ok.astype(jnp.int32), sidx, num_segments=slots)
+        for m, plan_m in enumerate(fused.members):
+            # allocation over the raw per-slot counts, as edgesos does
+            n_k = sampling.allocate_proportional(counts_all, fractions[m])
+            mask = (ranks < n_k[sidx]) & ok
+            members_out.append(
+                _member_reduce(plan_m, table, cfg, cols, sidx, mask, ok, valid, counts, axes)
+            )
+    comm = jnp.int32(aqp.refined_preagg_bytes(fused, slots))
+    return tuple(members_out), comm
 
 
 def _stats_template(plan: Plan) -> dict:
@@ -292,6 +394,7 @@ class EdgeCloudPipeline:
         self._plans: dict[Query, Plan] = {}
         self._execs: dict[tuple[Query, bool], callable] = {}
         self._passes: dict[tuple[Plan, bool], callable] = {}
+        self._refined_passes: dict[tuple, callable] = {}
 
     # -- declarative query API ----------------------------------------------
 
@@ -372,6 +475,29 @@ class EdgeCloudPipeline:
         self._passes[(plan, sharded)] = fn
         return fn
 
+    def _refined_pass_fn(self, fused: aqp.FusedPlan, sharded: bool):
+        """Jitted *refined* fused pass: per-member nested/ROI-masked
+        accumulator states from one shared stratify + randomness draw (see
+        :func:`_fused_edge_program`).  Takes a ``(M,)`` per-member fraction
+        vector in the fraction slot, so controller-driven fraction drift
+        never recompiles.
+        """
+        cache_key = (fused.members, sharded)
+        fn = self._refined_passes.get(cache_key)
+        if fn is not None:
+            return fn
+        table, cfg = self.table, self.config
+
+        def run(key, lat, lon, cols, valid, fractions, axes=None):
+            return _fused_edge_program(
+                fused, table, cfg, key, lat, lon, cols, valid, fractions, axes=axes
+            )
+
+        template = (tuple((_stats_template(p), 0, 0, 0) for p in fused.members), 0)
+        fn = self._compiled(fused.shared, run, template, sharded)
+        self._refined_passes[cache_key] = fn
+        return fn
+
     def _window_arrays(self, window, plan: Plan):
         """Host-side: split a WindowBatch / mapping into device inputs."""
         if isinstance(window, WindowBatch):
@@ -399,7 +525,9 @@ class EdgeCloudPipeline:
         plan = self.plan(query)
         lat, lon, cols, valid = self._window_arrays(window, plan)
         fn = self._query_fn(query, sharded=False)
-        return fn(key, lat, lon, cols, valid, jnp.float32(fraction))
+        res = fn(key, lat, lon, cols, valid, jnp.float32(fraction))
+        # upstream drop accounting is a host-side property of the window
+        return res._replace(n_dropped=int(getattr(window, "n_dropped", 0)))
 
     def execute_sharded(self, query: Query, key, window, fraction=1.0) -> QueryResult:
         """Distributed execute: shards = edge nodes, collective = uplink."""
@@ -408,7 +536,8 @@ class EdgeCloudPipeline:
         plan = self.plan(query)
         lat, lon, cols, valid = self._window_arrays(window, plan)
         fn = self._query_fn(query, sharded=True)
-        return fn(key, lat, lon, cols, valid, jnp.float32(fraction))
+        res = fn(key, lat, lon, cols, valid, jnp.float32(fraction))
+        return res._replace(n_dropped=int(getattr(window, "n_dropped", 0)))
 
     # -- legacy single-estimate API (shim over the canonical query) ---------
 

@@ -289,8 +289,18 @@ def fusion_key(plan: Plan) -> tuple:
     :func:`fuse`.  Aggregates, columns, group-by, and confidence are *not*
     part of the key; they only shape accumulation and finalize, which fuse
     freely.
+
+    Bernoulli is special: its keep-decisions are per-tuple uniforms,
+    independent of stratum membership and hence of any ROI-induced stratum
+    reassignment — so *differing-ROI* Bernoulli queries can share one pass
+    with per-member accumulation masks (cross-signature fusion).  The ROI
+    therefore drops out of the key for ``bernoulli``+``preagg`` plans; raw
+    mode keeps it (the compacted uplink buffer is ROI-filtered, so members
+    must agree on the filter).
     """
     q = plan.query
+    if q.method == "bernoulli" and q.mode == "preagg":
+        return (q.method, q.mode)
     return (q.method, q.mode, q.roi)
 
 
@@ -321,16 +331,29 @@ class FusedPlan:
     def mode(self) -> str:
         return self.shared.query.mode
 
+    @property
+    def cross_roi(self) -> bool:
+        """True when members carry differing ROIs (Bernoulli cross-signature
+        fusion): the shared carrier samples unfiltered and each member
+        applies its own ROI as a per-member accumulation mask, so the group
+        must run the *refined* per-member edge program, never the shared
+        union-accumulation one."""
+        return len({p.query.roi for p in self.members}) > 1
+
 
 def fuse(plans) -> FusedPlan:
     """Fuse lowered plans that share a sampling signature into one pass.
 
     Unions the referenced columns (order-preserving across members), the
     per-aggregate accumulator-kind sets, and the per-column kind sets; the
-    ROI/method/mode are required to agree (:func:`fusion_key`) so the shared
+    fusion keys are required to agree (:func:`fusion_key`) so the shared
     sample is elementwise-identical to each member's independent sample —
     callers (``StreamSession``) partition heterogeneous query sets into
     fusable groups first.  Raises ``ValueError`` on a signature mismatch.
+    Bernoulli ``preagg`` members may carry *differing ROIs*
+    (:attr:`FusedPlan.cross_roi`): such groups must be executed through the
+    refined per-member edge program, which applies each member's ROI as an
+    accumulation mask over the shared uniform draw.
     """
     plans = tuple(plans)
     if not plans:
@@ -350,9 +373,16 @@ def fuse(plans) -> FusedPlan:
         for c, kinds in p.column_kinds:
             col_kinds[c] = tuple(dict.fromkeys(col_kinds[c] + tuple(kinds)))
     q0 = plans[0].query
+    # a cross-ROI (Bernoulli) group's carrier samples unfiltered: each
+    # member's ROI becomes a per-member accumulation mask in the refined
+    # edge program rather than a shared pre-filter
+    rois = {p.query.roi for p in plans}
+    shared_roi, prefix_code = (
+        (q0.roi, plans[0].roi_prefix_code) if len(rois) == 1 else (None, None)
+    )
     carrier = Query(
         aggs=tuple(AggSpec("mean", c) for c in columns),
-        roi=q0.roi,
+        roi=shared_roi,
         confidence=q0.confidence,
         method=q0.method,
         mode=q0.mode,
@@ -363,7 +393,7 @@ def fuse(plans) -> FusedPlan:
         accumulators=tuple(accs.items()),
         column_kinds=tuple(col_kinds.items()),
         num_groups=1,
-        roi_prefix_code=plans[0].roi_prefix_code,
+        roi_prefix_code=prefix_code,
     )
     return FusedPlan(members=plans, shared=shared)
 
@@ -409,6 +439,7 @@ class QueryResult(NamedTuple):
     n_overflow: jnp.ndarray
     n_truncated: jnp.ndarray  # raw-mode kept tuples shed by the static buffer
     comm_bytes: jnp.ndarray  # analytic edge->cloud payload of the plan's mode
+    n_dropped: int = 0  # tuples the window(s) shed upstream (bounded buffers)
 
 
 def zero_overflow_column(stats: ColumnStats) -> ColumnStats:
@@ -662,3 +693,30 @@ def raw_bytes(plan: Plan, capacity: int) -> int:
     """Analytic per-shard payload of raw mode: stratum id (4B) + validity
     (1B) + one f32 per referenced column, per buffer slot."""
     return capacity * (5 + 4 * len(plan.columns))
+
+
+def refined_preagg_bytes(fused: FusedPlan, num_slots: int) -> int:
+    """Analytic per-shard payload of a *refined* fused pass (per-member
+    thinned states instead of one union accumulation).
+
+    Each member ships its own realized ``n`` vector (its nested subsample's
+    per-stratum sizes) plus its plan-declared per-column accumulator
+    payloads.  The window's population vector is shared across members of a
+    same-ROI group (one ``total``); cross-ROI members count different
+    populations and each ship their own."""
+    per_member_totals = fused.cross_roi
+    vectors = 0 if per_member_totals else 1  # shared total/counts
+    for p in fused.members:
+        vectors += 2 if per_member_totals else 1  # n (+ total when cross-ROI)
+        for _c, kinds in p.column_kinds:
+            vectors += sum(estimators.accumulator(k).payload_vectors() for k in kinds)
+    return 4 * num_slots * vectors
+
+
+def downstream_tuple_bytes(plan: Plan) -> int:
+    """Bytes one kept tuple of this plan costs any downstream consumer
+    (stratum id + validity + the referenced columns — the raw-mode tuple
+    layout).  Scales a member's *refined* sample size into the
+    downstream-volume accounting of the session layer: a 10%-fraction
+    member of a fused group pays 10%, not the group max."""
+    return 5 + 4 * len(plan.columns)

@@ -103,6 +103,22 @@ def _rank_within_stratum(key, stratum_idx: jnp.ndarray, num_slots: int):
     return ranks, counts
 
 
+def srs_ranks(key, stratum_idx: jnp.ndarray, num_slots: int):
+    """The shared randomness of nested SRS: ``(ranks, counts)``.
+
+    ``ranks`` depends only on ``(key, stratum_idx)`` — never on the
+    fraction — so ``ranks < allocate_proportional(counts, f)[stratum_idx]``
+    is *exactly* the sample :func:`srs_sample` draws at fraction ``f`` for
+    the same key, and the keep-sets are nested in ``f`` (``n_k`` is
+    monotone in the fraction).  One rank vector therefore serves every
+    member of a fused pass at its *own* fraction: thinning the shared
+    sample to a lower-fraction member's target is Horvitz-Thompson
+    subsampling (the nested SRS of per-query fraction refinement), and the
+    refined sample is bit-identical to the member's independent draw.
+    """
+    return _rank_within_stratum(key, stratum_idx, num_slots)
+
+
 def srs_sample(
     key, stratum_idx: jnp.ndarray, num_slots: int, n_k: jnp.ndarray, counts: jnp.ndarray
 ) -> SampleResult:
@@ -118,6 +134,13 @@ def bernoulli_sample(
     key, stratum_idx: jnp.ndarray, num_slots: int, fraction, backend: str = "segment"
 ) -> SampleResult:
     """Per-stratum Bernoulli(f_k) sampling (no sort; random n_k).
+
+    The per-tuple uniforms depend only on ``(key, N)`` — not on stratum
+    membership or the fraction — so one draw nests every fraction
+    (``u < f'`` is a subset of ``u < f`` for ``f' <= f``) and is oblivious
+    to ROI-induced stratum reassignment: the properties behind per-query
+    fraction refinement and cross-signature Bernoulli fusion in the
+    session layer.
 
     ``backend="pallas"`` routes the fused gather+threshold+weight step
     through the ``kernels/sample_mask`` one-hot MXU kernel on TPU (same

@@ -25,16 +25,30 @@ approximate analytics wins by sharing one sampling pass):
     (:func:`~.estimators.merge_accs_panes`, one vectorized pass per kind)
     into each window's answer without re-touching raw tuples.
   * Per-query QoS runs through a vectorized feedback controller state (one
-    fraction per registered query, :func:`~.feedback.update_vector`); each
-    fusion group samples at the max fraction of its members, so every query
-    receives at least the sample its own controller asked for.
+    fraction per registered query, :func:`~.feedback.update_vector`).
+  * **Per-query fraction refinement**: when a preagg fusion group's member
+    fractions diverge (or a Bernoulli group's ROIs differ), the group runs
+    the *refined* edge program (:func:`~.pipeline._fused_edge_program`):
+    one shared stratify + randomness draw, thinned per member to its own
+    fraction by nested Horvitz-Thompson subsampling (shared SRS ranks /
+    shared Bernoulli uniforms, deterministic in the step key).  Each
+    member's estimates, error bounds, and downstream volume then reflect
+    its *own* effective fraction — a 10%-fraction query fused with an 80%
+    one pays 10% downstream — instead of free-riding the group max.
+  * **Checkpoint/restore**: ``checkpoint()`` snapshots every registration's
+    pane ring, controller slice, and the session drop/uplink counters to a
+    versioned pytree (:mod:`.checkpoint`); ``restore()`` into a freshly
+    registered session resumes mid-window bit-identically.
 
 Correctness contract (property-tested): with every query at the same
 fraction, a session step's estimates are elementwise-identical (same PRNG
 key) to running each query through ``pipeline.execute`` independently, in
 both ``preagg`` and ``raw`` modes — fusion changes the *cost*, never the
-answer.  With divergent per-query fractions the shared pass samples at the
-group max, so per-query error is never worse than requested.
+answer.  With divergent per-query fractions, refined preagg members are
+*still* elementwise-identical to independent ``execute`` at their own
+fraction (the nested subsample IS the sample their independent draw would
+produce); raw-mode groups keep the group-max behavior, so their per-query
+error is never worse than requested.
 
 ``EdgeCloudPipeline.run_stream`` is a thin shim over a single-query session.
 """
@@ -56,7 +70,12 @@ from .windows import WindowSpec
 
 
 class _Pane(NamedTuple):
-    """One pane's contribution to a registered query's window ring."""
+    """One pane's contribution to a registered query's window ring.
+
+    ``n_sampled`` is this *member's* realized sample of the pane — the
+    refined (nested-subsampled / ROI-masked) size when the group ran the
+    refined pass, the shared group sample otherwise.
+    """
 
     stats: dict  # column -> {kind: state} registry pytree (query's columns)
     n_sampled: jnp.ndarray
@@ -87,10 +106,22 @@ class Registration:
     steps: int = 0
     panes_seen: int = 0
     ring: list = dataclasses.field(default_factory=list)
+    # running count of tuples *this* query's samples kept (device-lazy);
+    # under refinement a low-fraction member accumulates its own, smaller,
+    # nested sample here instead of the group max's
+    downstream_tuples: int | jnp.ndarray = 0
 
     @property
     def qos_active(self) -> bool:
         return self.slo is not None and self.qos_key is not None
+
+    @property
+    def downstream_bytes(self) -> int:
+        """Downstream volume this query's samples cost so far: realized
+        kept tuples x the plan's per-tuple layout (see
+        :func:`~.query.downstream_tuple_bytes`).  Reading this syncs the
+        device-lazy tuple counter."""
+        return int(self.downstream_tuples) * aqp.downstream_tuple_bytes(self.plan)
 
 
 class SessionStep(NamedTuple):
@@ -138,6 +169,7 @@ class StreamSession:
         self.pane_index = 0
         self.total_comm_bytes = 0
         self.total_dropped = 0
+        self.total_passes = 0  # edge passes run (one per fusion group per pane)
         self._regs: dict[int, Registration] = {}
         self._next_qid = 0
         self._fused: dict[tuple[Query, ...], FusedPlan] = {}
@@ -304,14 +336,39 @@ class StreamSession:
             n_truncated=n_truncated,
             # uplink spent on this window's span: one shared pass per pane
             comm_bytes=jnp.int32(sum(p.comm_bytes for p in panes)),
+            # window-level drop accounting: tuples the window's panes shed
+            # upstream (survives checkpoint/restore — the ring carries it)
+            n_dropped=sum(p.n_dropped for p in panes),
         )
 
     # -- the continuous loop -------------------------------------------------
 
+    @staticmethod
+    def _refines(fused: FusedPlan, fractions: list[float]) -> bool:
+        """Host-side choice of edge program for one group this pane.
+
+        The *shared* pass (one union accumulation at the group-max
+        fraction, bit-compatible with the pre-refinement session) serves
+        single members and uniform-fraction same-ROI groups; the *refined*
+        per-member pass serves divergent-fraction preagg groups and
+        cross-ROI Bernoulli groups (which the shared pass cannot express).
+        Raw-mode groups always share: their compacted uplink buffer is one
+        ROI-filtered sample at the group max.  Neyman groups always share
+        too — refined thinning would need per-stratum stddev threading to
+        preserve the variance-optimal allocation.
+        """
+        if len(fused.members) < 2:
+            return False
+        if fused.cross_roi:
+            return True
+        if fused.mode != "preagg" or fused.shared.query.method == "neyman":
+            return False
+        return len(set(fractions)) > 1
+
     def step(self, key, pane) -> SessionStep:
         """Feed one pane through every fusion group and emit due windows.
 
-        Every group's shared pass uses ``key`` directly (not folded), so a
+        Every group's pass uses ``key`` directly (not folded), so a
         single-group session reproduces ``execute(query, key, ...)`` exactly.
         """
         if not self._regs:
@@ -321,35 +378,52 @@ class StreamSession:
         comm_total = 0
         for members in self._groups():
             fused = self._fused_plan(members)
-            fraction = max(r.fraction for r in members)
+            fractions = [r.fraction for r in members]
             lat, lon, cols, valid = self.pipe._window_arrays(pane, fused.shared)
-            fn = self.pipe._pass_fn(fused.shared, self.sharded)
-            stats, n_sampled, n_valid, n_overflow, n_truncated, _ = fn(
-                key, lat, lon, cols, valid, jnp.float32(fraction)
-            )
-            # analytic, host-side: avoid syncing on the device pass here
-            comm = self._analytic_comm(fused, lat.shape[0])
+            if self._refines(fused, fractions):
+                fn = self.pipe._refined_pass_fn(fused, self.sharded)
+                outs, _ = fn(
+                    key, lat, lon, cols, valid, jnp.asarray(fractions, jnp.float32)
+                )
+                comm = aqp.refined_preagg_bytes(fused, self.pipe.table.num_slots)
+                zero = jnp.int32(0)  # refined pass is preagg-only: no buffer
+                per_member = [(st, ns, nv, no, zero) for st, ns, nv, no in outs]
+            else:
+                fn = self.pipe._pass_fn(fused.shared, self.sharded)
+                stats, n_sampled, n_valid, n_overflow, n_truncated, _ = fn(
+                    key, lat, lon, cols, valid, jnp.float32(max(fractions))
+                )
+                # analytic, host-side: avoid syncing on the device pass here
+                comm = self._analytic_comm(fused, lat.shape[0])
+                per_member = []
+                for reg in members:
+                    kinds_map = reg.plan.column_kind_map
+                    # carve this query's columns *and* accumulator kinds
+                    # out of the shared pass's union states
+                    carved = {
+                        c: {k: stats[c][k] for k in kinds_map[c]}
+                        for c in reg.plan.columns
+                    }
+                    per_member.append(
+                        (carved, n_sampled, n_valid, n_overflow, n_truncated)
+                    )
             comm_total += comm
-            for reg in members:
-                kinds_map = reg.plan.column_kind_map
+            self.total_passes += 1
+            for reg, (stats_m, n_s, n_v, n_o, n_t) in zip(members, per_member):
                 reg.ring.append(
                     _Pane(
-                        # carve this query's columns *and* accumulator kinds
-                        # out of the shared pass's union states
-                        stats={
-                            c: {k: stats[c][k] for k in kinds_map[c]}
-                            for c in reg.plan.columns
-                        },
-                        n_sampled=n_sampled,
-                        n_valid=n_valid,
-                        n_overflow=n_overflow,
-                        n_truncated=n_truncated,
+                        stats=stats_m,
+                        n_sampled=n_s,
+                        n_valid=n_v,
+                        n_overflow=n_o,
+                        n_truncated=n_t,
                         n_dropped=n_dropped,
                         comm_bytes=comm,
                     )
                 )
                 del reg.ring[: -reg.window.size]
                 reg.panes_seen += 1
+                reg.downstream_tuples = reg.downstream_tuples + n_s
                 if reg.panes_seen % reg.window.stride == 0:
                     emitted[reg.qid] = self._emit(reg, key)
         self._update_controllers(emitted)
@@ -372,6 +446,33 @@ class StreamSession:
             key, sub = jax.random.split(key)
             history.append(self.step(sub, pane))
         return history
+
+    # -- fault tolerance -----------------------------------------------------
+
+    def checkpoint(self, path=None) -> dict:
+        """Snapshot the session's resumable state (pane rings, controller
+        slices, drop/uplink counters) to a versioned pytree; ``path`` also
+        persists it as an ``.npz`` (see :mod:`.checkpoint`).  O(S · columns)
+        floats per open pane — cheap enough to take every pane."""
+        from . import checkpoint as ckpt  # sits above session
+
+        snap = ckpt.snapshot(self)
+        if path is not None:
+            ckpt.save(snap, path)
+        return snap
+
+    def restore(self, snapshot) -> "StreamSession":
+        """Load a snapshot (dict or ``.npz`` path) into this session.
+
+        The session must have re-registered the *same* queries in the same
+        order (validated against stored fingerprints); rings, fractions,
+        EMA state, and drop counters resume exactly where the snapshot was
+        taken, so subsequent steps are bit-identical to a session that
+        never restarted (given the same per-pane keys)."""
+        from . import checkpoint as ckpt
+
+        ckpt.restore(self, snapshot)
+        return self
 
     # -- vectorized QoS ------------------------------------------------------
 

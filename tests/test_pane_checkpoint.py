@@ -1,0 +1,288 @@
+"""Crash/resume determinism: pane checkpoint/restore for StreamSession.
+
+Checkpoint a session mid-sliding-window, restore into a *fresh* session
+(re-registered queries, fresh compile caches), and assert the resumed run
+is **bit-identical** to one that never restarted: every emitted estimate,
+interval, fraction trajectory, and ``n_dropped`` accounting — in preagg
+and raw modes, through SLO-driven controllers, and across the npz
+file round-trip.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import (
+    SHENZHEN_BBOX,
+    AggSpec,
+    EdgeCloudPipeline,
+    PipelineConfig,
+    Query,
+    SLO,
+    StreamSession,
+    WindowSpec,
+    checkpoint,
+    make_table,
+    windows,
+)
+from repro.data.streams import shenzhen_taxi_stream
+
+PANE = 4_000
+N_PANES = 6
+CUT = 3  # checkpoint after this many panes: mid-sliding AND mid-tumbling
+
+EXACT_FIELDS = ("value", "moe", "ci_low", "ci_high", "relative_error", "n", "population")
+
+
+@pytest.fixture(scope="module")
+def table():
+    return make_table(*SHENZHEN_BBOX, precision=5)
+
+
+@pytest.fixture(scope="module")
+def pipe(table):
+    return EdgeCloudPipeline(table, PipelineConfig(raw_capacity=PANE))
+
+
+@pytest.fixture(scope="module")
+def panes():
+    stream = shenzhen_taxi_stream(num_chunks=2, seed=5)
+    return list(windows.count_windows(stream, PANE))[:N_PANES]
+
+
+# the registered workload: an SLO-driven sliding window (controller state +
+# open multi-pane ring), a mid-flight tumbling window, and a quantile query
+# (sketch states in the ring) — registration order matters and is part of
+# the restore contract
+def _register(sess):
+    r_slide = sess.register(
+        Query(aggs=(AggSpec("mean", "value"), AggSpec("max", "value"))),
+        slo=SLO(target_relative_error=0.02),
+        window=WindowSpec("sliding", size=3),
+    )
+    r_tumble = sess.register(
+        Query(aggs=(AggSpec("var", "occupancy"),)),
+        window=WindowSpec("tumbling", size=2),
+    )
+    r_quant = sess.register(Query(aggs=(AggSpec("p50", "value"), AggSpec("p99", "value"))))
+    return r_slide, r_tumble, r_quant
+
+
+def _drive(sess, panes, start, root):
+    return [
+        sess.step(jax.random.fold_in(root, start + i), p) for i, p in enumerate(panes)
+    ]
+
+
+def _assert_steps_identical(expected, got):
+    assert len(expected) == len(got)
+    for e, g in zip(expected, got):
+        assert set(e.results) == set(g.results)
+        assert e.fractions == g.fractions
+        assert e.n_dropped == g.n_dropped
+        assert e.comm_bytes == g.comm_bytes
+        for qid in e.results:
+            re_, rg = e.results[qid], g.results[qid]
+            for k in re_.estimates:
+                for field in EXACT_FIELDS:
+                    np.testing.assert_array_equal(
+                        np.asarray(getattr(re_.estimates[k], field)),
+                        np.asarray(getattr(rg.estimates[k], field)),
+                        err_msg=f"qid={qid} {k}.{field}",
+                    )
+            assert int(re_.n_sampled) == int(rg.n_sampled)
+            assert int(re_.n_valid) == int(rg.n_valid)
+            assert int(re_.n_dropped) == int(rg.n_dropped)
+
+
+def _uninterrupted(pipe, panes, root, initial_fraction=0.8):
+    sess = StreamSession(pipe, initial_fraction=initial_fraction)
+    _register(sess)
+    return sess, _drive(sess, panes, 0, root)
+
+
+def test_restore_resumes_bit_identically(pipe, panes):
+    """In-memory snapshot taken mid-sliding-window: a fresh session resumes
+    with bit-identical estimates, intervals, controller fractions, and drop
+    accounting vs. the uninterrupted run."""
+    root = jax.random.key(42)
+    sess_full, full = _uninterrupted(pipe, panes, root)
+
+    sess_a = StreamSession(pipe, initial_fraction=0.8)
+    _register(sess_a)
+    _drive(sess_a, panes[:CUT], 0, root)
+    snap = sess_a.checkpoint()
+
+    sess_b = StreamSession(pipe, initial_fraction=0.8)
+    _register(sess_b)
+    sess_b.restore(snap)
+    assert sess_b.pane_index == CUT
+    resumed = _drive(sess_b, panes[CUT:], CUT, root)
+    _assert_steps_identical(full[CUT:], resumed)
+    assert sess_b.total_comm_bytes == sess_full.total_comm_bytes
+    assert sess_b.total_dropped == sess_full.total_dropped
+    assert sess_b.total_passes == sess_full.total_passes
+    for ra, rb in zip(sess_full.registrations, sess_b.registrations):
+        assert ra.fraction == rb.fraction
+        assert ra.re_ema == rb.re_ema
+        assert ra.steps == rb.steps
+        assert ra.downstream_bytes == rb.downstream_bytes
+
+
+def test_restore_file_roundtrip(pipe, panes, tmp_path):
+    """The npz round-trip preserves bit-identity (f32 leaves and controller
+    floats survive serialization exactly)."""
+    root = jax.random.key(7)
+    _, full = _uninterrupted(pipe, panes, root)
+
+    sess_a = StreamSession(pipe, initial_fraction=0.8)
+    _register(sess_a)
+    _drive(sess_a, panes[:CUT], 0, root)
+    path = tmp_path / "session.npz"
+    snap = sess_a.checkpoint(path)
+    assert path.exists()
+    loaded = checkpoint.load(path)
+    assert loaded["version"] == checkpoint.SNAPSHOT_VERSION
+    assert loaded["pane_index"] == snap["pane_index"]
+
+    sess_b = StreamSession(pipe, initial_fraction=0.8)
+    _register(sess_b)
+    sess_b.restore(path)
+    resumed = _drive(sess_b, panes[CUT:], CUT, root)
+    _assert_steps_identical(full[CUT:], resumed)
+
+
+def test_raw_and_preagg_parity_across_restore(pipe, panes):
+    """Preagg-vs-raw agreement survives a restore boundary: both modes,
+    each interrupted and restored mid-window, keep producing identical
+    estimates for the same sample (and each is bit-identical to its own
+    uninterrupted run)."""
+    root = jax.random.key(13)
+    results = {}
+    for mode in ("preagg", "raw"):
+        q = Query(aggs=(AggSpec("mean", "value"), AggSpec("sum", "value")), mode=mode)
+        sess_full = StreamSession(pipe, initial_fraction=0.7)
+        reg_f = sess_full.register(q, window=WindowSpec("sliding", size=2))
+        full = _drive(sess_full, panes, 0, root)
+
+        sess_a = StreamSession(pipe, initial_fraction=0.7)
+        sess_a.register(q, window=WindowSpec("sliding", size=2))
+        _drive(sess_a, panes[:CUT], 0, root)
+        snap = sess_a.checkpoint()
+        sess_b = StreamSession(pipe, initial_fraction=0.7)
+        reg_b = sess_b.register(q, window=WindowSpec("sliding", size=2))
+        sess_b.restore(snap)
+        resumed = _drive(sess_b, panes[CUT:], CUT, root)
+        _assert_steps_identical(full[CUT:], resumed)
+        results[mode] = [s.results[reg_b.qid] for s in resumed]
+        assert reg_b.qid == reg_f.qid
+
+    for res_p, res_r in zip(results["preagg"], results["raw"]):
+        for k in res_p.estimates:
+            a = float(np.asarray(res_p.estimates[k].value))
+            b = float(np.asarray(res_r.estimates[k].value))
+            assert b == pytest.approx(a, rel=1e-5), k
+
+
+def test_n_dropped_survives_restore(pipe):
+    """Regression (the restore-boundary accounting fix): bounded-capacity
+    panes shed tuples before AND after the checkpoint; the restored
+    session's ``total_dropped`` and every emitted window's ``n_dropped``
+    match the uninterrupted run exactly."""
+    stream = shenzhen_taxi_stream(num_chunks=3, chunk_size=5_000, seed=3)
+    droppy = list(windows.pane_windows(stream, pane_seconds=60.0, capacity=2_000))
+    assert sum(p.n_dropped for p in droppy) > 0
+    cut = len(droppy) // 2
+    assert sum(p.n_dropped for p in droppy[:cut]) > 0  # drops on both sides
+    assert sum(p.n_dropped for p in droppy[cut:]) > 0
+    root = jax.random.key(21)
+    q = Query(aggs=(AggSpec("mean", "value"),))
+
+    sess_full = StreamSession(pipe, initial_fraction=0.5)
+    reg_full = sess_full.register(q, window=WindowSpec("tumbling", size=2))
+    full = _drive(sess_full, droppy, 0, root)
+
+    sess_a = StreamSession(pipe, initial_fraction=0.5)
+    sess_a.register(q, window=WindowSpec("tumbling", size=2))
+    _drive(sess_a, droppy[:cut], 0, root)
+    sess_b = StreamSession(pipe, initial_fraction=0.5)
+    reg_b = sess_b.register(q, window=WindowSpec("tumbling", size=2))
+    sess_b.restore(sess_a.checkpoint())
+    # the snapshot carries the pre-cut drop total ...
+    assert sess_b.total_dropped == sum(p.n_dropped for p in droppy[:cut])
+    resumed = _drive(sess_b, droppy[cut:], cut, root)
+    # ... and the resumed run folds post-cut drops on top, exactly
+    assert sess_b.total_dropped == sess_full.total_dropped
+    assert sess_b.total_dropped == sum(p.n_dropped for p in droppy)
+    emitted_full = [
+        int(s.results[reg_full.qid].n_dropped) for s in full[cut:] if s.results
+    ]
+    emitted_resumed = [
+        int(s.results[reg_b.qid].n_dropped) for s in resumed if s.results
+    ]
+    assert emitted_full == emitted_resumed
+    # a window whose ring spans the restore boundary still counts both sides
+    spanning = next(
+        (s for s in resumed if s.results and int(next(iter(s.results.values())).n_dropped) > 0),
+        None,
+    )
+    assert spanning is not None
+
+
+def test_restore_validation_guards(pipe, panes):
+    """Version, registration-set, and order mismatches are rejected before
+    any state is touched."""
+    sess = StreamSession(pipe, initial_fraction=0.8)
+    _register(sess)
+    _drive(sess, panes[:2], 0, jax.random.key(0))
+    snap = sess.checkpoint()
+
+    bad_version = dict(snap, version=checkpoint.SNAPSHOT_VERSION + 1)
+    fresh = StreamSession(pipe, initial_fraction=0.8)
+    _register(fresh)
+    with pytest.raises(ValueError, match="version"):
+        fresh.restore(bad_version)
+
+    missing = StreamSession(pipe, initial_fraction=0.8)
+    missing.register(Query(aggs=(AggSpec("mean", "value"),)))
+    with pytest.raises(ValueError, match="re-register"):
+        missing.restore(snap)
+
+    wrong_query = StreamSession(pipe, initial_fraction=0.8)
+    r1, r2, r3 = _register(wrong_query)
+    wrong_query.unregister(r3)
+    wrong_query.register(Query(aggs=(AggSpec("sum", "value"),)))  # not the original
+    with pytest.raises(ValueError, match="does not match"):
+        wrong_query.restore(snap)
+    # the failed restores left the fresh sessions untouched
+    assert fresh.pane_index == 0 and not fresh.registrations[0].ring
+
+
+def test_refined_group_state_checkpoints(pipe, panes):
+    """Divergent-fraction (refined) groups restore bit-identically too: the
+    per-member thinned ring states and downstream counters round-trip."""
+    root = jax.random.key(33)
+    q_lo = Query(aggs=(AggSpec("mean", "value"),))
+    q_hi = Query(aggs=(AggSpec("mean", "occupancy", name="o"),))
+
+    def build():
+        sess = StreamSession(pipe)
+        regs = (
+            sess.register(q_lo, initial_fraction=0.2, window=WindowSpec("sliding", size=2)),
+            sess.register(q_hi, initial_fraction=0.9, window=WindowSpec("sliding", size=2)),
+        )
+        return sess, regs
+
+    sess_full, regs_full = build()
+    full = _drive(sess_full, panes[:4], 0, root)
+
+    sess_a, _ = build()
+    _drive(sess_a, panes[:2], 0, root)
+    sess_b, regs_b = build()
+    sess_b.restore(sess_a.checkpoint())
+    resumed = _drive(sess_b, panes[2:4], 2, root)
+    _assert_steps_identical(full[2:], resumed)
+    for rf, rb in zip(regs_full, regs_b):
+        assert rf.downstream_bytes == rb.downstream_bytes
+    assert regs_b[0].downstream_bytes < regs_b[1].downstream_bytes

@@ -19,9 +19,13 @@ import jax.numpy as jnp
 
 from repro.core import (
     SHENZHEN_BBOX,
+    AggSpec,
+    Query,
+    StreamSession,
     estimators,
     make_table,
     sampling,
+    windows,
 )
 from repro.core.pipeline import EdgeCloudPipeline, PipelineConfig
 from repro.data.streams import materialize, shenzhen_taxi_stream
@@ -147,6 +151,58 @@ print("MODES_AGREE", outs[0])
     )
     assert r.returncode == 0, r.stderr[-2000:]
     assert "MODES_AGREE" in r.stdout
+
+
+def test_session_soak_mixed_methods_50_windows():
+    """Soak the continuous-query engine: a 3-query mixed-method session
+    (one SRS query + two *differing-ROI* Bernoulli queries) over 50+ panes
+    of a synthetic mobility stream at the paper's headline 80% fraction.
+
+    Gates: per-query MAPE vs the full-population per-pane truth stays
+    under the paper's 10% figure, every query answers every pane, and
+    cross-signature fusion serves the two Bernoulli ROIs with exactly ONE
+    edge pass per pane (two passes per pane total: srs group + bernoulli
+    group)."""
+    roi_south = ((22.45, 22.66), (113.76, 114.64))
+    roi_north = ((22.64, 22.86), (113.76, 114.64))
+    q_srs = Query(aggs=(AggSpec("mean", "value"),))
+    q_south = Query(aggs=(AggSpec("mean", "value", name="south"),),
+                    method="bernoulli", roi=roi_south)
+    q_north = Query(aggs=(AggSpec("mean", "occupancy", name="north"),),
+                    method="bernoulli", roi=roi_north)
+
+    table = make_table(*SHENZHEN_BBOX, precision=5)
+    pipe = EdgeCloudPipeline(table)
+    sess = StreamSession(pipe, initial_fraction=0.8)
+    regs = [sess.register(q) for q in (q_srs, q_south, q_north)]
+    assert len(sess._groups()) == 2  # srs + ONE fused cross-ROI bernoulli group
+
+    def in_roi(pane, roi):
+        (a, b), (c, d) = roi
+        lat, lon = np.asarray(pane.lat), np.asarray(pane.lon)
+        return np.asarray(pane.valid) & (lat >= a) & (lat <= b) & (lon >= c) & (lon <= d)
+
+    stream = shenzhen_taxi_stream(num_chunks=11, chunk_size=20_000, seed=17)
+    panes = list(windows.count_windows(stream, 4_000))
+    assert len(panes) >= 50
+    apes = {r.qid: [] for r in regs}
+    truth_cols = (("value", None), ("value", roi_south), ("occupancy", roi_north))
+    for i, pane in enumerate(panes):
+        step = sess.step(jax.random.fold_in(jax.random.key(99), i), pane)
+        assert set(step.results) == {r.qid for r in regs}  # every query, every pane
+        for reg, (col, roi) in zip(regs, truth_cols):
+            sel = np.asarray(pane.valid) if roi is None else in_roi(pane, roi)
+            truth = float(np.mean(np.asarray(pane.columns[col])[sel]))
+            est = float(np.asarray(
+                next(iter(step.results[reg.qid].estimates.values())).value
+            ))
+            apes[reg.qid].append(abs(est - truth) / abs(truth))
+    for reg in regs:
+        mape = 100.0 * float(np.mean(apes[reg.qid]))
+        assert mape < 10.0, f"qid={reg.qid} MAPE@80%={mape:.2f}"
+    # exactly one edge pass per fusion group per pane, soak-long
+    assert sess.total_passes == 2 * len(panes)
+    assert sess.pane_index == len(panes)
 
 
 def test_train_driver_end_to_end(tmp_path):

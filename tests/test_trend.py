@@ -1,0 +1,61 @@
+"""Benchmark trend-history append (benchmarks/trend.py): the gh-pages
+series CI builds from each run's BENCH_*.json files."""
+
+import json
+
+import pytest
+
+from benchmarks import trend
+
+
+def _write(path, data):
+    path.write_text(json.dumps(data))
+    return str(path)
+
+
+@pytest.fixture
+def measured(tmp_path):
+    return [
+        _write(tmp_path / "BENCH_query.json", {"fused_speedup_n4": 3.3, "config": {}}),
+        _write(tmp_path / "BENCH_kernel.json", {"edge_reduce_fused_speedup_c4": 4.7}),
+    ]
+
+
+def test_append_creates_and_extends_history(tmp_path, measured):
+    hist_path = str(tmp_path / "bench-history.json")
+    h1 = trend.append(measured, hist_path, sha="aaa", run_id="1", timestamp=1.0)
+    assert h1["version"] == trend.HISTORY_VERSION
+    assert len(h1["runs"]) == 1
+    entry = h1["runs"][0]
+    assert entry["sha"] == "aaa"
+    assert entry["metrics"]["BENCH_query.json"]["fused_speedup_n4"] == 3.3
+    assert entry["metrics"]["BENCH_kernel.json"]["edge_reduce_fused_speedup_c4"] == 4.7
+    h2 = trend.append(measured, hist_path, sha="bbb", run_id="2", timestamp=2.0)
+    assert [r["sha"] for r in h2["runs"]] == ["aaa", "bbb"]
+    # the file on disk round-trips
+    assert json.loads(open(hist_path).read())["runs"][1]["sha"] == "bbb"
+
+
+def test_append_is_idempotent_per_run(tmp_path, measured):
+    hist_path = str(tmp_path / "bench-history.json")
+    trend.append(measured, hist_path, sha="aaa", run_id="7", timestamp=1.0)
+    trend.append(measured, hist_path, sha="aaa", run_id="7", timestamp=2.0)  # CI retry
+    h = trend.append(measured, hist_path, sha="bbb", run_id="8", timestamp=3.0)
+    assert [r["sha"] for r in h["runs"]] == ["aaa", "bbb"]
+    assert h["runs"][0]["timestamp"] == 2.0  # retry replaced its own entry
+
+
+def test_append_bounds_history_length(tmp_path, measured):
+    hist_path = str(tmp_path / "bench-history.json")
+    for i in range(5):
+        h = trend.append(
+            measured, hist_path, sha=f"s{i}", run_id=str(i), timestamp=float(i), max_runs=3
+        )
+    assert [r["sha"] for r in h["runs"]] == ["s2", "s3", "s4"]  # newest kept
+
+
+def test_append_rejects_unknown_version(tmp_path, measured):
+    hist_path = tmp_path / "bench-history.json"
+    _write(hist_path, {"version": 999, "runs": []})
+    with pytest.raises(SystemExit, match="version"):
+        trend.append(measured, str(hist_path), sha="x", run_id="1")

@@ -171,14 +171,50 @@ def restore(sess, snap) -> None:
     sess.total_passes = int(snap["total_passes"])
 
 
-def save(snap: dict, path) -> None:
+def rotation_path(path, age: int) -> str:
+    """The on-disk name of the ``age``-panes-old snapshot of ``path``:
+    ``path`` itself for age 0, ``path.1`` (previous), ``path.2``, ..."""
+    return str(path) if age == 0 else f"{path}.{age}"
+
+
+def _rotate(path, keep_last: int) -> None:
+    """Shift the retained history one slot: ``path`` -> ``path.1`` -> ...
+    dropping anything at or beyond ``keep_last`` (each shift is its own
+    ``os.replace``, so a crash mid-rotation loses at most the oldest
+    retained snapshots — never the newest good one)."""
+    age = 1
+    while os.path.exists(rotation_path(path, age)):
+        age += 1
+    for old in range(age, keep_last - 1, -1):  # prune beyond the new budget
+        stale = rotation_path(path, old)
+        if os.path.exists(stale):
+            os.remove(stale)
+    for old in range(min(age, keep_last - 1), 0, -1):
+        src = rotation_path(path, old - 1)
+        if os.path.exists(src):
+            os.replace(src, rotation_path(path, old))
+
+
+def save(snap: dict, path, keep_last: int | None = None) -> None:
     """Persist a snapshot as one ``.npz``: ring leaves as arrays, every
     scalar in an embedded JSON header (no pickling anywhere).
 
     The write is **atomic** (temp file + ``os.replace``): checkpointing
     every pane over the same path must never truncate the last good
     snapshot if the node dies mid-write — that crash is exactly the event
-    this module exists to survive."""
+    this module exists to survive.
+
+    ``keep_last=K`` retains a rotation of the K most recent snapshots:
+    before writing, the existing ``path`` is shifted to ``path.1``,
+    ``path.1`` to ``path.2``, ... and anything older than K−1 shifts is
+    pruned (see :func:`rotation_path`).  A corrupted newest snapshot —
+    e.g. external truncation after a successful write — can then be
+    recovered by loading ``rotation_path(path, 1)`` and replaying one more
+    pane.  ``keep_last=None`` (default) keeps the single-file behavior."""
+    if keep_last is not None:
+        if keep_last < 1:
+            raise ValueError(f"keep_last must be >= 1; got {keep_last}")
+        _rotate(path, keep_last)
     arrays: dict[str, np.ndarray] = {}
     meta = {k: v for k, v in snap.items() if k != "registrations"}
     meta_regs = []

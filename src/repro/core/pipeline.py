@@ -614,7 +614,7 @@ class EdgeCloudPipeline:
         sampling pass across all of them.
         """
         slo = slo or feedback.SLO()
-        key = key if key is not None else jax.random.key(0)
+        key = key if key is not None else jax.random.key(0)  # edgelint: ignore[EDG001] fixed default seed for driverless runs
         if query is not None:
             from .session import StreamSession  # session sits above pipeline
 
@@ -640,5 +640,10 @@ class EdgeCloudPipeline:
                 state.fraction,
             )
             state = feedback.update(state, res.estimate.relative_error, res.n_valid, slo)
-            history.append((res, float(state.fraction)))
+            # keep the controller fraction device-lazy: a float() here would
+            # block every pane on the previous pane's device work
+            history.append((res, state.fraction))
+        # one host sync at the stream boundary instead of one per pane
+        fracs = jax.device_get([f for _, f in history])  # edgelint: ignore[EDG002] single end-of-stream readback
+        history = [(res, float(f)) for (res, _), f in zip(history, fracs)]  # edgelint: ignore[EDG002] floats already on host via device_get
         return history, state

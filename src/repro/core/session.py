@@ -440,7 +440,7 @@ class StreamSession:
 
     def run(self, panes, key=None) -> list[SessionStep]:
         """Drive the session over an iterator of panes (one key per pane)."""
-        key = key if key is not None else jax.random.key(0)
+        key = key if key is not None else jax.random.key(0)  # edgelint: ignore[EDG001] fixed default seed for driverless runs
         history = []
         for pane in panes:
             key, sub = jax.random.split(key)
@@ -449,16 +449,19 @@ class StreamSession:
 
     # -- fault tolerance -----------------------------------------------------
 
-    def checkpoint(self, path=None) -> dict:
+    def checkpoint(self, path=None, keep_last: int | None = None) -> dict:
         """Snapshot the session's resumable state (pane rings, controller
         slices, drop/uplink counters) to a versioned pytree; ``path`` also
         persists it as an ``.npz`` (see :mod:`.checkpoint`).  O(S · columns)
-        floats per open pane — cheap enough to take every pane."""
+        floats per open pane — cheap enough to take every pane.
+
+        ``keep_last=K`` rotates the K most recent on-disk snapshots
+        (``path``, ``path.1``, ...) instead of overwriting in place."""
         from . import checkpoint as ckpt  # sits above session
 
         snap = ckpt.snapshot(self)
         if path is not None:
-            ckpt.save(snap, path)
+            ckpt.save(snap, path, keep_last=keep_last)
         return snap
 
     def restore(self, snapshot) -> "StreamSession":

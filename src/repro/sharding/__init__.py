@@ -1,6 +1,7 @@
 """Sharding substrate: logical axis rules -> mesh PartitionSpecs."""
 
 from .logical import (
+    MESH_AXIS_NAMES,
     LogicalRules,
     activation_rules,
     active_rules,
@@ -13,6 +14,7 @@ from .logical import (
 
 __all__ = [
     "LogicalRules",
+    "MESH_AXIS_NAMES",
     "activation_rules",
     "active_rules",
     "constrain",

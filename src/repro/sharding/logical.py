@@ -26,6 +26,11 @@ from typing import Any
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+# The mesh-axis vocabulary — the single source of truth every collective
+# axis-name literal in the tree must be drawn from (edgelint EDG005), and
+# the fallback axis set when rules are built without a mesh.
+MESH_AXIS_NAMES = ("pod", "data", "model")
+
 
 @dataclasses.dataclass(frozen=True)
 class LogicalRules:
@@ -74,7 +79,7 @@ class LogicalRules:
 
 
 def default_rules(mesh: Mesh | None = None, *, sequence_parallel: bool = False) -> LogicalRules:
-    axis_names = set(mesh.axis_names) if mesh is not None else {"pod", "data", "model"}
+    axis_names = set(mesh.axis_names) if mesh is not None else set(MESH_AXIS_NAMES)
     dp: tuple[str, ...] = tuple(a for a in ("pod", "data") if a in axis_names)
     tp: tuple[str, ...] = ("model",) if "model" in axis_names else ()
     fsdp: tuple[str, ...] = ("data",) if "data" in axis_names else ()

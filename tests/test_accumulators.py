@@ -213,6 +213,9 @@ def test_register_custom_accumulator_end_to_end(rng):
         def merge_panes(self, stacked):
             return jnp.sum(stacked, axis=0)
 
+        def psum(self, state, axis_names, shared=None):
+            return jax.lax.psum(state, axis_names)
+
         def zero_overflow(self, state):
             keep = jnp.arange(state.shape[0]) < (state.shape[0] - 1)
             return jnp.where(keep, state, 0.0)

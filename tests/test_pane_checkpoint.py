@@ -286,3 +286,73 @@ def test_refined_group_state_checkpoints(pipe, panes):
     for rf, rb in zip(regs_full, regs_b):
         assert rf.downstream_bytes == rb.downstream_bytes
     assert regs_b[0].downstream_bytes < regs_b[1].downstream_bytes
+
+
+# ---------------------------------------------------------------------------
+# keep-last-K snapshot rotation
+# ---------------------------------------------------------------------------
+
+
+def _mini_snap(pane_index):
+    """The smallest valid snapshot: distinct pane_index tags each save."""
+    return {
+        "version": checkpoint.SNAPSHOT_VERSION,
+        "pane_index": pane_index,
+        "total_comm_bytes": 0,
+        "total_dropped": 0,
+        "total_passes": 0,
+        "registrations": [],
+    }
+
+
+def test_checkpoint_rotation_keeps_last_k(tmp_path):
+    path = tmp_path / "sess.npz"
+    for i in range(5):
+        checkpoint.save(_mini_snap(i), path, keep_last=3)
+    # newest at path, older generations at .1/.2, nothing beyond the budget
+    for age, expected in ((0, 4), (1, 3), (2, 2)):
+        rotated = checkpoint.rotation_path(path, age)
+        assert checkpoint.load(rotated)["pane_index"] == expected
+    assert not (tmp_path / "sess.npz.3").exists()
+
+
+def test_checkpoint_rotation_budget_shrink_prunes(tmp_path):
+    path = tmp_path / "sess.npz"
+    for i in range(4):
+        checkpoint.save(_mini_snap(i), path, keep_last=4)
+    assert (tmp_path / "sess.npz.3").exists()
+    # shrinking the budget prunes the tail on the next save
+    checkpoint.save(_mini_snap(4), path, keep_last=2)
+    assert checkpoint.load(path)["pane_index"] == 4
+    assert checkpoint.load(checkpoint.rotation_path(path, 1))["pane_index"] == 3
+    assert not (tmp_path / "sess.npz.2").exists()
+    assert not (tmp_path / "sess.npz.3").exists()
+
+
+def test_checkpoint_rotation_default_is_single_file(tmp_path):
+    path = tmp_path / "sess.npz"
+    for i in range(3):
+        checkpoint.save(_mini_snap(i), path)  # keep_last=None: no rotation
+    assert checkpoint.load(path)["pane_index"] == 2
+    assert not (tmp_path / "sess.npz.1").exists()
+    with pytest.raises(ValueError, match="keep_last"):
+        checkpoint.save(_mini_snap(9), path, keep_last=0)
+
+
+def test_session_checkpoint_rotation_restorable(pipe, panes, tmp_path):
+    """Session-level integration: checkpointing every pane with keep_last=2
+    leaves the previous pane's snapshot restorable at rotation age 1."""
+    path = tmp_path / "rot.npz"
+    root = jax.random.key(11)
+    sess = StreamSession(pipe)
+    _register(sess)
+    for i, pane in enumerate(panes[:3]):
+        sess.step(jax.random.fold_in(root, i), pane)
+        sess.checkpoint(path, keep_last=2)
+    prev = checkpoint.load(checkpoint.rotation_path(path, 1))
+    assert prev["pane_index"] == sess.pane_index - 1
+    fresh = StreamSession(pipe)
+    _register(fresh)
+    fresh.restore(prev)
+    assert fresh.pane_index == sess.pane_index - 1
+    assert not (tmp_path / "rot.npz.2").exists()

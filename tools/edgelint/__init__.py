@@ -1,0 +1,68 @@
+"""edgelint: repo-native static analysis for the edge-cloud AQP stack.
+
+The system's headline guarantees are bit-identity guarantees — fused
+sessions match independent execution, checkpoint/resume is bit-identical
+mid-window, refined members reproduce their own independent draws.  Each
+one is an *invariant of the source*, mechanically checkable from the AST,
+and each dies silently under an innocent-looking edit.  edgelint is the
+executable spec of those invariants:
+
+  EDG001  determinism        — no wall-clock / host randomness in the core
+                               closure; randomness flows through threaded
+                               jax.random keys
+  EDG002  host-sync hygiene  — no silent device->host syncs in jitted /
+                               pallas / shard_map functions or pane loops
+  EDG003  accumulator        — registered kinds implement the full
+          protocol             mergeable Accumulator surface
+  EDG004  kernel triad       — ops.py / ref.py exist with matching public
+                               signatures; f32 accumulation literals
+  EDG005  collective axes    — psum/pmin/pmax axis literals agree with the
+                               mesh axes declared in sharding/
+
+Run it::
+
+    python -m tools.edgelint src/ tests/ benchmarks/ [--format=json]
+
+Suppress one finding, with a reason::
+
+    frac = jax.device_get(f)  # edgelint: ignore[EDG002] controller readback
+
+Library entry point: :func:`lint_paths`.
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+
+from . import rules as _rules  # noqa: F401  (importing registers the battery)
+from .framework import (
+    RULES,
+    Finding,
+    LintResult,
+    Project,
+    Rule,
+    load_project,
+    render_human,
+    render_json,
+    run_rules,
+)
+
+__all__ = [
+    "RULES",
+    "Finding",
+    "LintResult",
+    "Project",
+    "Rule",
+    "lint_paths",
+    "load_project",
+    "render_human",
+    "render_json",
+    "run_rules",
+]
+
+
+def lint_paths(paths, root=None, rules=None) -> LintResult:
+    """Lint ``paths`` (files/dirs, relative to ``root``; default cwd)."""
+    root = Path(root) if root is not None else Path.cwd()
+    project = load_project(root, [Path(p) for p in paths])
+    return run_rules(project, rules)

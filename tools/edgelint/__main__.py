@@ -1,0 +1,41 @@
+"""CLI: ``python -m tools.edgelint [--format=human|json] [--root=DIR] paths...``
+
+Exit codes: 0 clean (suppressed findings allowed), 1 active findings,
+2 unparseable input or usage error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from . import lint_paths, render_human, render_json
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.edgelint",
+        description="repo-native static analysis: determinism, tracer "
+        "hygiene, and mergeability contracts (EDG001-EDG005)",
+    )
+    parser.add_argument("paths", nargs="+", help="files or directories to lint")
+    parser.add_argument(
+        "--format",
+        choices=("human", "json"),
+        default="human",
+        help="output format (default: human)",
+    )
+    parser.add_argument(
+        "--root",
+        default=None,
+        help="project root for scope-sensitive rules (default: cwd)",
+    )
+    args = parser.parse_args(argv)
+    result = lint_paths(args.paths, root=args.root)
+    out = render_json(result) if args.format == "json" else render_human(result)
+    print(out)
+    return result.exit_code
+
+
+if __name__ == "__main__":
+    sys.exit(main())

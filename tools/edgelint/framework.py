@@ -1,0 +1,266 @@
+"""edgelint checker framework: project model, rule registry, suppressions.
+
+A :class:`Rule` inspects a :class:`Project` (every scanned module, parsed
+once) and yields :class:`Finding`s.  Findings landing on a line carrying a
+``# edgelint: ignore[CODE]`` (or ``ignore[CODE1,CODE2]``) comment — on the
+offending line itself or on the line of its enclosing statement — are
+*suppressed*: recorded, counted, but not fatal.  Suppressions should carry
+a trailing reason (``# edgelint: ignore[EDG002] checkpoint save boundary``)
+so every escape hatch documents why the invariant may bend there.
+
+Rules are cross-file by design (protocol completeness, kernel triads, and
+mesh-axis agreement all need the whole tree), so the framework hands each
+rule the full project rather than one module at a time.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+from pathlib import Path
+from typing import Iterable, Iterator
+
+
+SUPPRESS_RE = re.compile(
+    r"#\s*edgelint:\s*ignore\[(?P<codes>[A-Z0-9_,\s]+)\]\s*(?P<reason>.*)$"
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location."""
+
+    code: str
+    message: str
+    path: str  # project-root-relative posix path
+    line: int
+    col: int = 0
+    suppressed: bool = False
+    suppress_reason: str = ""
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def render(self) -> str:
+        tag = " (suppressed)" if self.suppressed else ""
+        return f"{self.path}:{self.line}:{self.col + 1}: {self.code}{tag} {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Suppression:
+    """One parsed ``# edgelint: ignore[...]`` comment."""
+
+    line: int
+    codes: frozenset[str]
+    reason: str
+
+    def covers(self, code: str) -> bool:
+        return code in self.codes or "*" in self.codes
+
+
+class Module:
+    """One parsed source file plus its suppression table."""
+
+    def __init__(self, path: Path, relpath: str, source: str, tree: ast.Module):
+        self.path = path
+        self.relpath = relpath  # posix, relative to the project root
+        self.source = source
+        self.tree = tree
+        self.suppressions: dict[int, Suppression] = {}
+        for lineno, text in enumerate(source.splitlines(), start=1):
+            m = SUPPRESS_RE.search(text)
+            if m:
+                codes = frozenset(
+                    c.strip() for c in m.group("codes").split(",") if c.strip()
+                )
+                self.suppressions[lineno] = Suppression(
+                    line=lineno, codes=codes, reason=m.group("reason").strip()
+                )
+        # map every line spanned by a multi-line statement back to lines
+        # carrying a suppression, so the comment can sit on any line of the
+        # statement it excuses (in practice: the first or the offending one)
+        self._stmt_lines: dict[int, set[int]] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.stmt) and hasattr(node, "end_lineno"):
+                span = set(range(node.lineno, (node.end_lineno or node.lineno) + 1))
+                hit = span & set(self.suppressions)
+                for ln in span:
+                    if hit:
+                        self._stmt_lines.setdefault(ln, set()).update(hit)
+
+    def suppression_for(self, code: str, line: int) -> Suppression | None:
+        candidates = {line} | self._stmt_lines.get(line, set())
+        for ln in sorted(candidates):
+            sup = self.suppressions.get(ln)
+            if sup is not None and sup.covers(code):
+                return sup
+        return None
+
+
+class Project:
+    """Every scanned module, addressable by root-relative posix path."""
+
+    def __init__(self, root: Path, modules: list[Module], errors: list[str]):
+        self.root = root
+        self.modules = modules
+        self.errors = errors  # unparseable files (reported, exit code 2)
+        self.by_relpath = {m.relpath: m for m in modules}
+
+    def under(self, *prefixes: str) -> list[Module]:
+        """Modules whose root-relative path starts with any prefix."""
+        return [
+            m
+            for m in self.modules
+            if any(m.relpath == p or m.relpath.startswith(p.rstrip("/") + "/") for p in prefixes)
+        ]
+
+
+class Rule:
+    """One checker: a rule code, the guarantee it protects, and a visitor."""
+
+    code: str = "EDG000"
+    name: str = "?"
+    guarantee: str = "?"
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        raise NotImplementedError
+
+
+RULES: list[Rule] = []
+
+
+def register_rule(rule: Rule) -> Rule:
+    RULES.append(rule)
+    return rule
+
+
+def load_project(root: Path, paths: Iterable[Path]) -> Project:
+    """Parse every ``*.py`` under ``paths`` (files or directories)."""
+    root = root.resolve()
+    files: list[Path] = []
+    for p in paths:
+        p = Path(p)
+        if not p.is_absolute():
+            p = root / p
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        elif p.suffix == ".py":
+            files.append(p)
+    modules, errors = [], []
+    seen: set[Path] = set()
+    for f in files:
+        f = f.resolve()
+        if f in seen or "__pycache__" in f.parts:
+            continue
+        seen.add(f)
+        try:
+            rel = f.relative_to(root).as_posix()
+        except ValueError:
+            rel = f.as_posix()
+        try:
+            source = f.read_text(encoding="utf-8")
+            tree = ast.parse(source, filename=str(f))
+        except (SyntaxError, UnicodeDecodeError) as exc:
+            errors.append(f"{rel}: {exc}")
+            continue
+        modules.append(Module(f, rel, source, tree))
+    return Project(root, modules, errors)
+
+
+@dataclasses.dataclass
+class LintResult:
+    findings: list[Finding]  # active (fatal) findings
+    suppressed: list[Finding]  # findings excused by an ignore comment
+    errors: list[str]
+
+    @property
+    def exit_code(self) -> int:
+        if self.errors:
+            return 2
+        return 1 if self.findings else 0
+
+    def as_dict(self) -> dict:
+        counts: dict[str, int] = {}
+        for f in self.findings:
+            counts[f.code] = counts.get(f.code, 0) + 1
+        return {
+            "findings": [f.as_dict() for f in self.findings],
+            "suppressed": [f.as_dict() for f in self.suppressed],
+            "errors": self.errors,
+            "counts": counts,
+            "n_findings": len(self.findings),
+            "n_suppressed": len(self.suppressed),
+        }
+
+
+def run_rules(project: Project, rules: Iterable[Rule] | None = None) -> LintResult:
+    active: list[Finding] = []
+    suppressed: list[Finding] = []
+    for rule in rules if rules is not None else RULES:
+        for finding in rule.check(project):
+            mod = project.by_relpath.get(finding.path)
+            sup = mod.suppression_for(finding.code, finding.line) if mod else None
+            if sup is not None:
+                suppressed.append(
+                    dataclasses.replace(
+                        finding, suppressed=True, suppress_reason=sup.reason
+                    )
+                )
+            else:
+                active.append(finding)
+    active.sort(key=lambda f: (f.path, f.line, f.col, f.code))
+    suppressed.sort(key=lambda f: (f.path, f.line, f.col, f.code))
+    return LintResult(findings=active, suppressed=suppressed, errors=project.errors)
+
+
+def render_human(result: LintResult) -> str:
+    lines = [f.render() for f in result.findings]
+    lines += [f.render() for f in result.suppressed]
+    lines += [f"edgelint: parse error: {e}" for e in result.errors]
+    n_f, n_s = len(result.findings), len(result.suppressed)
+    lines.append(f"edgelint: {n_f} finding(s), {n_s} suppressed")
+    return "\n".join(lines)
+
+
+def render_json(result: LintResult) -> str:
+    return json.dumps(result.as_dict(), indent=2, sort_keys=True)
+
+
+# ---------------------------------------------------------------------------
+# Shared AST helpers used by several rules
+# ---------------------------------------------------------------------------
+
+
+def dotted_name(node: ast.AST) -> str | None:
+    """``a.b.c`` attribute/name chains as a dotted string, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(node: ast.Call) -> str | None:
+    return dotted_name(node.func)
+
+
+def is_constant(node: ast.AST) -> bool:
+    """Literal constants (incl. negated numbers and literal tuples)."""
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, (ast.USub, ast.UAdd)):
+        return is_constant(node.operand)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return all(is_constant(e) for e in node.elts)
+    return False
+
+
+def functions(tree: ast.Module) -> Iterator[ast.FunctionDef | ast.AsyncFunctionDef]:
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node

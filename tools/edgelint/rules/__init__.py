@@ -1,0 +1,11 @@
+"""edgelint rule battery — importing a rule module registers its checker."""
+
+from . import accumulators, collectives, determinism, host_sync, kernel_triad
+
+__all__ = [
+    "accumulators",
+    "collectives",
+    "determinism",
+    "host_sync",
+    "kernel_triad",
+]

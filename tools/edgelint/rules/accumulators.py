@@ -1,0 +1,124 @@
+"""EDG003 — accumulator-protocol completeness for registered kinds.
+
+The query engine reduces windows into registry accumulators and assumes
+every registered kind is *fully mergeable*: it must accumulate on the
+edge, pairwise-merge, vector-merge across pane rings, cross shards in one
+collective, drop its overflow slot, declare its uplink payload, and own
+its error-bound logic.  A drop-in kind that implements ``accumulate`` and
+``merge`` but not ``merge_panes`` works in tumbling one-pane tests and
+silently breaks the first sliding window — exactly the half-implemented
+mergeability this rule makes impossible.
+
+Mechanics: every class whose instance (or class object) is passed to a
+call of ``register_accumulator`` must provide the full surface —
+``accumulate / merge / merge_panes / psum / zero_overflow /
+payload_vectors / interval`` — either in its own body or inherited from an
+ancestor *with a real implementation* (a body that is only
+``raise NotImplementedError`` does not count; default implementations like
+the base ``interval -> None`` do).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from ..framework import Finding, Project, Rule, call_name, register_rule
+
+REQUIRED_METHODS = (
+    "accumulate",
+    "merge",
+    "merge_panes",
+    "psum",
+    "zero_overflow",
+    "payload_vectors",
+    "interval",
+)
+
+
+def _is_stub(fn: ast.FunctionDef | ast.AsyncFunctionDef) -> bool:
+    """Body is only a docstring + ``raise NotImplementedError`` (or pass)."""
+    body = list(fn.body)
+    if body and isinstance(body[0], ast.Expr) and isinstance(body[0].value, ast.Constant):
+        body = body[1:]  # drop docstring
+    if not body:
+        return True
+    if len(body) != 1:
+        return False
+    stmt = body[0]
+    if isinstance(stmt, ast.Pass):
+        return True
+    if isinstance(stmt, ast.Raise):
+        exc = stmt.exc
+        target = exc.func if isinstance(exc, ast.Call) else exc
+        return isinstance(target, ast.Name) and target.id == "NotImplementedError"
+    if isinstance(stmt, ast.Expr) and isinstance(stmt.value, ast.Constant):
+        return stmt.value.value is Ellipsis
+    return False
+
+
+class AccumulatorProtocolRule(Rule):
+    code = "EDG003"
+    name = "accumulator-protocol"
+    guarantee = (
+        "every register_accumulator kind implements the full mergeable surface "
+        "(accumulate/merge/merge_panes/psum/zero_overflow/payload_vectors/interval)"
+    )
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        # class name -> (module relpath, ClassDef), across the whole tree
+        classes: dict[str, tuple[str, ast.ClassDef]] = {}
+        for mod in project.modules:
+            for node in ast.walk(mod.tree):
+                if isinstance(node, ast.ClassDef):
+                    classes.setdefault(node.name, (mod.relpath, node))
+
+        def implemented(cls: ast.ClassDef, method: str, seen: set[str]) -> bool:
+            if cls.name in seen:
+                return False
+            seen.add(cls.name)
+            for item in cls.body:
+                if (
+                    isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef))
+                    and item.name == method
+                ):
+                    return not _is_stub(item)
+            for base in cls.bases:
+                base_name = base.id if isinstance(base, ast.Name) else None
+                if base_name and base_name in classes:
+                    if implemented(classes[base_name][1], method, seen):
+                        return True
+            return False
+
+        for mod in project.modules:
+            for node in ast.walk(mod.tree):
+                if not (
+                    isinstance(node, ast.Call)
+                    and (call_name(node) or "").rsplit(".", 1)[-1]
+                    == "register_accumulator"
+                    and node.args
+                ):
+                    continue
+                arg = node.args[0]
+                # register_accumulator(Kind()) or register_accumulator(Kind)
+                target = arg.func if isinstance(arg, ast.Call) else arg
+                if not isinstance(target, ast.Name) or target.id not in classes:
+                    continue
+                cls = classes[target.id][1]
+                missing = [
+                    m for m in REQUIRED_METHODS if not implemented(cls, m, set())
+                ]
+                if missing:
+                    yield Finding(
+                        self.code,
+                        f"registered accumulator `{target.id}` is missing "
+                        f"{', '.join(missing)}: a partial kind half-implements "
+                        "mergeability (breaks pane rings / collectives / bounds "
+                        "the moment that path runs)",
+                        mod.relpath,
+                        node.lineno,
+                        node.col_offset,
+                    )
+
+
+register_rule(AccumulatorProtocolRule())

@@ -1,0 +1,130 @@
+"""EDG005 — collective-axis consistency with the declared mesh axes.
+
+``jax.lax.psum(x, "modle")`` typechecks, jits, and fails only at runtime
+inside a mesh — or, worse, a collective over the *wrong* valid axis
+produces numerically plausible garbage (a psum over ``"model"`` where the
+data axis was meant merges the wrong shards' sufficient stats).  The mesh
+axis vocabulary is declared once, in ``sharding/`` (``MESH_AXIS_NAMES``);
+every collective axis-name **string literal** anywhere in the tree must be
+drawn from it.  Collectives whose axis is a variable (the pipeline threads
+``axes`` through shard_map'd programs) are out of scope by design — their
+consistency is enforced where the variable is bound.
+
+Also checked: the ``axis_name``/``axis_names`` keyword form, and literal
+tuples of axis names (each element must be declared).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from ..framework import Finding, Project, Rule, call_name, register_rule
+
+COLLECTIVES = {
+    "psum",
+    "pmin",
+    "pmax",
+    "pmean",
+    "all_gather",
+    "all_to_all",
+    "axis_index",
+    "ppermute",
+    "psum_scatter",
+}
+
+DECLARATION = "MESH_AXIS_NAMES"
+
+
+def declared_axes(project: Project) -> tuple[set[str], str | None]:
+    """The axis vocabulary: a ``MESH_AXIS_NAMES`` tuple/set assignment in a
+    ``sharding/`` module.  Returns (axes, declaring-relpath)."""
+    for mod in project.modules:
+        if "sharding/" not in mod.relpath and not mod.relpath.startswith("sharding"):
+            continue
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Assign):
+                continue
+            names = [t.id for t in node.targets if isinstance(t, ast.Name)]
+            if DECLARATION not in names:
+                continue
+            if isinstance(node.value, (ast.Tuple, ast.List, ast.Set)):
+                elems = node.value.elts
+                if all(
+                    isinstance(e, ast.Constant) and isinstance(e.value, str)
+                    for e in elems
+                ):
+                    return {e.value for e in elems}, mod.relpath
+    return set(), None
+
+
+def _axis_literals(node: ast.Call) -> list[tuple[str, ast.AST]]:
+    """Axis-name string literals of a collective call (positional arg 1 or
+    the axis_name/axis_names keyword; tuples yield each element)."""
+    candidates: list[ast.AST] = []
+    if len(node.args) >= 2:
+        candidates.append(node.args[1])
+    candidates.extend(
+        kw.value for kw in node.keywords if kw.arg in ("axis_name", "axis_names")
+    )
+    out: list[tuple[str, ast.AST]] = []
+    for c in candidates:
+        if isinstance(c, ast.Constant) and isinstance(c.value, str):
+            out.append((c.value, c))
+        elif isinstance(c, (ast.Tuple, ast.List)):
+            out.extend(
+                (e.value, e)
+                for e in c.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, str)
+            )
+    return out
+
+
+class CollectiveAxisRule(Rule):
+    code = "EDG005"
+    name = "collective-axes"
+    guarantee = (
+        "every psum/pmin/pmax/... axis-name literal is a mesh axis declared "
+        "in sharding/ (MESH_AXIS_NAMES) — no typo'd or undeclared axes"
+    )
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        axes, where = declared_axes(project)
+        if not axes:
+            # nothing declared: the vocabulary check has no source of truth.
+            # Only enforce when the project carries a sharding/ declaration —
+            # but if a sharding/ tree exists without one, that is the finding.
+            for mod in project.modules:
+                if "/sharding/" in f"/{mod.relpath}" and mod.relpath.endswith(
+                    "__init__.py"
+                ):
+                    yield Finding(
+                        self.code,
+                        f"sharding package declares no {DECLARATION} tuple: the "
+                        "collective-axis vocabulary must have one source of truth",
+                        mod.relpath,
+                        1,
+                    )
+            return
+        for mod in project.modules:
+            for node in ast.walk(mod.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = call_name(node)
+                if name is None or name.rsplit(".", 1)[-1] not in COLLECTIVES:
+                    continue
+                for axis, site in _axis_literals(node):
+                    if axis not in axes:
+                        yield Finding(
+                            self.code,
+                            f"collective over axis {axis!r} which is not a "
+                            f"declared mesh axis {sorted(axes)} (see "
+                            f"{DECLARATION} in {where}); typo'd axes fail at "
+                            "runtime or silently reduce over the wrong shards",
+                            mod.relpath,
+                            site.lineno,
+                            site.col_offset,
+                        )
+
+
+register_rule(CollectiveAxisRule())

@@ -1,0 +1,197 @@
+"""EDG001 — determinism: the sampling core must be a pure function of its keys.
+
+Every bit-identity guarantee in this system (fused sessions == independent
+execution, checkpoint/resume mid-window, nested-HT refinement reproducing a
+member's own draw) assumes the edge programs are deterministic in the
+threaded ``jax.random`` key.  One ``time.time()`` or ``np.random`` call in
+that closure and the guarantees die silently — the property tests would
+still pass on their own fixed seeds.
+
+Two scopes:
+
+* **core closure** (``src/repro/core`` + ``src/repro/kernels`` plus every
+  in-repo module they transitively import): wall-clock reads, OS entropy,
+  and *any* host-side randomness (numpy or stdlib, seeded or not) are
+  banned — randomness must flow through ``jax.random`` with an explicitly
+  threaded key, and key *construction* from a literal seed inside the
+  closure is flagged too (keys belong to the driver).
+* **everywhere scanned** (tests, benchmarks, examples, the rest of src):
+  only *unseeded / global-state* randomness is flagged — the process-global
+  ``np.random.*`` functions, the stdlib ``random`` module, ``os.urandom``,
+  ``uuid.uuid1/uuid4``, ``secrets``, and ``np.random.default_rng()``
+  without a seed.  ``np.random.default_rng(0)`` is deterministic and fine
+  outside the core closure.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from ..framework import (
+    Finding,
+    Module,
+    Project,
+    Rule,
+    call_name,
+    is_constant,
+    register_rule,
+)
+
+CORE_ROOTS = ("src/repro/core", "src/repro/kernels")
+
+# wall-clock / entropy reads banned inside the core closure
+CLOCK_CALLS = {
+    "time.time",
+    "time.time_ns",
+    "time.monotonic",
+    "time.monotonic_ns",
+    "time.perf_counter",
+    "time.perf_counter_ns",
+    "datetime.now",
+    "datetime.utcnow",
+    "datetime.today",
+    "datetime.datetime.now",
+    "datetime.datetime.utcnow",
+    "datetime.datetime.today",
+    "os.urandom",
+    "uuid.uuid1",
+    "uuid.uuid4",
+}
+
+# process-global randomness banned everywhere (deterministic runs can't
+# share state with whoever else touched the global generator)
+GLOBAL_RNG_PREFIXES = ("np.random.", "numpy.random.", "random.", "secrets.")
+GLOBAL_RNG_ALLOWED = {
+    "np.random.default_rng",
+    "numpy.random.default_rng",
+    "np.random.Generator",
+    "numpy.random.Generator",
+    "np.random.SeedSequence",
+    "numpy.random.SeedSequence",
+    "random.Random",  # instance-scoped stdlib generator (seedable)
+}
+
+# jax.random attributes that are *not* draws (key plumbing / introspection)
+JAX_RANDOM_NONDRAWS = {"key", "PRNGKey", "wrap_key_data", "key_data", "key_impl"}
+
+
+def _import_closure(project: Project) -> set[str]:
+    """Root-relative paths of core/kernels modules plus everything under
+    ``src/`` they transitively import (resolved textually, best-effort)."""
+    src_mods: dict[str, str] = {}  # module dotted path -> relpath
+    for mod in project.under("src"):
+        rel = mod.relpath
+        dotted = rel[len("src/") :].removesuffix(".py").replace("/", ".")
+        dotted = dotted.removesuffix(".__init__")
+        src_mods[dotted] = rel
+
+    def imports_of(mod: Module) -> set[str]:
+        """Dotted in-repo module names this module imports."""
+        pkg_parts = mod.relpath[len("src/") :].removesuffix(".py").split("/")
+        if pkg_parts[-1] == "__init__":
+            pkg_parts = pkg_parts[:-1]
+        out: set[str] = set()
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Import):
+                out.update(alias.name for alias in node.names)
+            elif isinstance(node, ast.ImportFrom):
+                if node.level:  # relative: resolve against this module's package
+                    base = pkg_parts[: len(pkg_parts) - node.level]
+                    stem = ".".join(base + ([node.module] if node.module else []))
+                else:
+                    stem = node.module or ""
+                out.add(stem)
+                out.update(f"{stem}.{alias.name}" for alias in node.names)
+        return {name for name in out if name in src_mods}
+
+    queue = [m for root in CORE_ROOTS for m in project.under(root)]
+    closure = {m.relpath for m in queue}
+    while queue:
+        mod = queue.pop()
+        for name in imports_of(mod):
+            rel = src_mods[name]
+            if rel not in closure:
+                closure.add(rel)
+                nxt = project.by_relpath.get(rel)
+                if nxt is not None:
+                    queue.append(nxt)
+    return closure
+
+
+class DeterminismRule(Rule):
+    code = "EDG001"
+    name = "determinism"
+    guarantee = (
+        "edge programs are pure functions of their threaded jax.random keys; "
+        "no wall-clock, OS-entropy, or host-global randomness in the core closure"
+    )
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        closure = _import_closure(project)
+        for mod in project.modules:
+            in_core = mod.relpath in closure
+            for node in ast.walk(mod.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = call_name(node)
+                if name is None:
+                    continue
+                yield from self._check_call(mod, node, name, in_core)
+
+    def _check_call(
+        self, mod: Module, node: ast.Call, name: str, in_core: bool
+    ) -> Iterator[Finding]:
+        def finding(msg: str) -> Finding:
+            return Finding(self.code, msg, mod.relpath, node.lineno, node.col_offset)
+
+        if in_core and name in CLOCK_CALLS:
+            yield finding(
+                f"`{name}()` in the deterministic core closure: edge programs "
+                "must be pure functions of their inputs (thread timestamps in "
+                "as data if the logic needs them)"
+            )
+            return
+        if name.startswith(GLOBAL_RNG_PREFIXES) and name not in GLOBAL_RNG_ALLOWED:
+            if in_core:
+                yield finding(
+                    f"`{name}()` in the deterministic core closure: randomness "
+                    "must flow through jax.random with an explicitly threaded key"
+                )
+            else:
+                yield finding(
+                    f"`{name}()` uses process-global random state; use "
+                    "`np.random.default_rng(seed)` (or a threaded jax.random key)"
+                )
+            return
+        if name in ("np.random.default_rng", "numpy.random.default_rng"):
+            if in_core:
+                yield finding(
+                    "host-side numpy RNG in the deterministic core closure: "
+                    "randomness must flow through jax.random with a threaded key"
+                )
+            elif not node.args and not node.keywords:
+                yield finding(
+                    "`default_rng()` without a seed draws OS entropy; pass an "
+                    "explicit seed so runs are reproducible"
+                )
+            return
+        if in_core and name.startswith("jax.random."):
+            attr = name[len("jax.random.") :]
+            if attr in ("key", "PRNGKey") and node.args and is_constant(node.args[0]):
+                yield finding(
+                    f"`{name}` built from a literal seed inside the core closure: "
+                    "keys belong to the driver and must be threaded in as arguments"
+                )
+            elif (
+                attr not in JAX_RANDOM_NONDRAWS
+                and node.args
+                and is_constant(node.args[0])
+            ):
+                yield finding(
+                    f"`{name}` called with a literal key: the key must be an "
+                    "explicitly threaded argument, not a constant"
+                )
+
+
+register_rule(DeterminismRule())

@@ -1,0 +1,164 @@
+"""EDG004 — kernel-triad contract: every kernel ships ops + ref, in sync.
+
+Each ``kernels/<name>/`` package is a triad: the Pallas implementation,
+``ops.py`` (the public dispatching wrapper), and ``ref.py`` (the oracle the
+parity suite diffs the kernel against).  The whole parity methodology
+assumes (a) both halves exist and (b) they take the same inputs — an ops
+function that grows a required argument without its ref growing the same
+one makes the parity test vacuous or wrong.  And because the MXU contracts
+in low precision internally, kernel *accumulation* dtypes must be written
+as f32 literals — a ``float16``/``bfloat16`` accumulator literal halves
+the mantissa of every merged moment and silently breaks the
+bit-identity-with-oracle contract (bf16 belongs on kernel *inputs*, with
+f32 accumulation, per the roadmap).
+
+Mechanics, per kernel directory (a directory under ``kernels/`` containing
+``__init__.py``):
+
+* ``ops.py`` and ``ref.py`` must both exist;
+* every public top-level function ``f`` in ``ops.py`` must have a ref
+  counterpart: ``<f>_ref`` by name, else any public ``*_ref`` function
+  whose *required* (no-default) parameter names match ``f``'s in order
+  (extra defaulted knobs like ``interpret=``/``block=`` are allowed to
+  differ — they select implementations, not semantics);
+* no ``float16`` / ``bfloat16`` / ``float64`` dtype literal anywhere in
+  the kernel package (f32 accumulation is the contract; f64 doesn't exist
+  on TPU and diverges the oracle).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from ..framework import Finding, Module, Project, Rule, dotted_name, register_rule
+
+BANNED_DTYPES = {
+    "jnp.float16",
+    "jnp.bfloat16",
+    "jnp.float64",
+    "np.float16",
+    "np.float64",
+    "numpy.float16",
+    "numpy.float64",
+    "jax.numpy.float16",
+    "jax.numpy.bfloat16",
+    "jax.numpy.float64",
+}
+BANNED_DTYPE_STRINGS = {"float16", "bfloat16", "float64", "f16", "bf16", "f64"}
+
+
+def _required_params(fn: ast.FunctionDef) -> tuple[str, ...]:
+    args = fn.args
+    n_required = len(args.args) - len(args.defaults)
+    positional = args.posonlyargs + args.args
+    return tuple(a.arg for a in positional[: len(args.posonlyargs) + n_required])
+
+
+def _public_functions(tree: ast.Module) -> list[ast.FunctionDef]:
+    return [
+        node
+        for node in tree.body
+        if isinstance(node, ast.FunctionDef) and not node.name.startswith("_")
+    ]
+
+
+class KernelTriadRule(Rule):
+    code = "EDG004"
+    name = "kernel-triad"
+    guarantee = (
+        "every kernels/<name>/ ships ops.py + ref.py with matching public "
+        "signatures, and kernel accumulation dtypes are f32 literals"
+    )
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        # group kernel-package modules by their directory
+        dirs: dict[str, dict[str, Module]] = {}
+        for mod in project.modules:
+            parts = mod.relpath.split("/")
+            if "kernels" in parts[:-1]:
+                k = parts.index("kernels")
+                if len(parts) >= k + 3:  # kernels/<name>/<file>.py
+                    dirs.setdefault("/".join(parts[: k + 2]), {})[parts[-1]] = mod
+
+        for dirname, files in sorted(dirs.items()):
+            if "__init__.py" not in files:
+                continue
+            init = files["__init__.py"]
+            for required in ("ops.py", "ref.py"):
+                if required not in files:
+                    yield Finding(
+                        self.code,
+                        f"kernel package `{dirname}/` has no {required}: the "
+                        "ops/ref triad is the parity contract",
+                        init.relpath,
+                        1,
+                    )
+            if "ops.py" in files and "ref.py" in files:
+                yield from self._check_signatures(files["ops.py"], files["ref.py"])
+            for mod in files.values():
+                yield from self._check_dtypes(mod)
+
+    def _check_signatures(self, ops: Module, ref: Module) -> Iterator[Finding]:
+        ref_fns = {
+            fn.name: fn for fn in _public_functions(ref.tree) if fn.name.endswith("_ref")
+        }
+        for fn in _public_functions(ops.tree):
+            want = _required_params(fn)
+            match = ref_fns.get(f"{fn.name}_ref")
+            if match is None:
+                match = next(
+                    (r for r in ref_fns.values() if _required_params(r) == want), None
+                )
+            if match is None:
+                yield Finding(
+                    self.code,
+                    f"ops function `{fn.name}{want}` has no ref counterpart: "
+                    f"expected `{fn.name}_ref` (or a `*_ref` with the same "
+                    "required params) in ref.py — without it the parity suite "
+                    "cannot oracle this kernel",
+                    ops.relpath,
+                    fn.lineno,
+                )
+            elif _required_params(match) != want:
+                yield Finding(
+                    self.code,
+                    f"ops `{fn.name}` required params {want} != ref "
+                    f"`{match.name}` required params {_required_params(match)}: "
+                    "ops and oracle must take the same inputs",
+                    ops.relpath,
+                    fn.lineno,
+                )
+
+    def _check_dtypes(self, mod: Module) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            name = dotted_name(node) if isinstance(node, ast.Attribute) else None
+            if name in BANNED_DTYPES:
+                yield Finding(
+                    self.code,
+                    f"`{name}` dtype literal in a kernel package: accumulation "
+                    "dtypes must be f32 literals (jnp.float32)",
+                    mod.relpath,
+                    node.lineno,
+                    node.col_offset,
+                )
+            elif (
+                isinstance(node, ast.Call)
+                and any(
+                    kw.arg in ("dtype", "preferred_element_type")
+                    and isinstance(kw.value, ast.Constant)
+                    and kw.value.value in BANNED_DTYPE_STRINGS
+                    for kw in node.keywords
+                )
+            ):
+                yield Finding(
+                    self.code,
+                    "non-f32 dtype string in a kernel package: accumulation "
+                    "dtypes must be f32 literals",
+                    mod.relpath,
+                    node.lineno,
+                    node.col_offset,
+                )
+
+
+register_rule(KernelTriadRule())

@@ -13,7 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.edge_reduce import edge_reduce
-from repro.kernels.edge_reduce.ref import edge_reduce_percol, edge_reduce_ref
+from repro.kernels.edge_reduce.ops import edge_reduce_percol
+from repro.kernels.edge_reduce.ref import edge_reduce_ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.geohash import geohash_encode

@@ -16,17 +16,28 @@ Usage:
         [--baseline benchmarks/baselines.json] [--tolerance 0.2]
 
 ``baselines.json`` format — per measured-file-basename sections of gated
-metric floors, plus an optional default tolerance::
+metrics, plus an optional default tolerance::
 
     {
       "tolerance": 0.2,
       "BENCH_query.json":  {"fused_speedup_n4": 3.5},
-      "BENCH_kernel.json": {"edge_reduce_fused_speedup_c8": 4.0}
+      "BENCH_kernel.json": {"edge_reduce_fused_speedup_c8": 4.0},
+      "BENCH_ingest.json": {"runtime_speedup": {"min": 1.3},
+                            "p99_pane_latency_ms": {"max": 400}}
     }
 
-A measured value passes when ``measured >= (1 - tolerance) * baseline``.
+Gate forms:
+
+* a bare number is a *tolerance floor*: pass when ``measured >= (1 -
+  tolerance) * baseline`` (ratio metrics that drift with runner noise);
+* ``{"min": x}`` is an *absolute floor*: ``measured >= x``, no tolerance —
+  for contractual minima (the pipelined runtime must beat the synchronous
+  loop by >= 1.3x, not "by 1.3x minus slack");
+* ``{"max": x}`` is an *absolute ceiling*: ``measured <= x`` — for latency
+  metrics where only growth is a regression.
+
 Gated keys missing from a measured file fail loudly (a renamed metric must
-be re-baselined, not silently ungated).
+be re-baselined, not silently ungated); so does a malformed gate object.
 """
 
 from __future__ import annotations
@@ -53,19 +64,43 @@ def check(measured_paths, baseline_path, tolerance=None):
         with open(path) as f:
             measured = json.load(f)
         for key, base in gates.items():
-            floor = (1.0 - tol) * float(base)
             got = measured.get(key)
             if got is None:
                 failures.append(f"{name}:{key} missing from measured output")
                 continue
-            ok = float(got) >= floor
+            got = float(got)
+            if isinstance(base, dict):
+                kind = sorted(base.keys() & {"min", "max"})
+                if len(kind) != 1 or base.keys() - {"min", "max"}:
+                    failures.append(
+                        f"{name}:{key} malformed gate {base!r}: expected "
+                        '{"min": x} or {"max": x}'
+                    )
+                    continue
+                bound = float(base[kind[0]])
+                if kind[0] == "min":
+                    ok, op, word = got >= bound, ">=", "floor"
+                else:
+                    ok, op, word = got <= bound, "<=", "ceiling"
+                report.append(
+                    f"{name}:{key} measured={got:.3f} {word}={bound:.3f} "
+                    f"(absolute) {'OK' if ok else 'REGRESSED'}"
+                )
+                if not ok:
+                    failures.append(
+                        f"{name}:{key} regressed: {got:.3f} violates "
+                        f"absolute {word} {op} {bound:.3f}"
+                    )
+                continue
+            floor = (1.0 - tol) * float(base)
+            ok = got >= floor
             report.append(
-                f"{name}:{key} measured={float(got):.3f} baseline={float(base):.3f} "
+                f"{name}:{key} measured={got:.3f} baseline={float(base):.3f} "
                 f"floor={floor:.3f} {'OK' if ok else 'REGRESSED'}"
             )
             if not ok:
                 failures.append(
-                    f"{name}:{key} regressed: {float(got):.3f} < {floor:.3f} "
+                    f"{name}:{key} regressed: {got:.3f} < {floor:.3f} "
                     f"(= (1-{tol})·{float(base):.3f})"
                 )
     return failures, report

@@ -30,6 +30,13 @@ Layers (bottom-up):
   checkpoint  — pane checkpoint/restore: versioned session snapshots
                 (rings + controller slices + drop counters) that resume a
                 restarted session mid-window bit-identically
+  qdisc       — bounded ingest queues (block/drop-newest/drop-oldest) with
+                per-cause drop ledgers feeding the n_dropped accounting
+  runtime     — the async execution layer: ``StreamRuntime`` runs a
+                producer thread + double-buffered staging + sync-free pane
+                dispatch over a session, with event-driven sampling, load
+                shedding, drain-then-snapshot checkpoints, and
+                ``RuntimeStats`` latency/overlap observability
 
 Typical use::
 
@@ -47,7 +54,7 @@ The legacy ``pipe.process_window(...)`` single-estimate API remains as a
 shim over the canonical ``SUM/MEAN(value)`` query.
 """
 
-from . import bounds, checkpoint, estimators, feedback, geohash, query, routing, sampling, session, stratify, windows
+from . import bounds, checkpoint, estimators, feedback, geohash, qdisc, query, routing, runtime, sampling, session, stratify, windows
 from .estimators import (
     Accumulator,
     ColumnStats,
@@ -72,10 +79,12 @@ from .estimators import (
     sample_stats,
     sketch_quantile,
 )
-from .feedback import SLO, ControllerState, StackedSLO
+from .feedback import SLO, ControllerState, EventPolicy, StackedSLO
 from .pipeline import EdgeCloudPipeline, PipelineConfig, WindowResult, edge_sample
 from .query import AggEstimate, AggSpec, FusedPlan, Plan, Query, QueryResult, fuse, fusion_key, lower
+from .qdisc import BoundedPaneQueue
 from .routing import RoutePlan, balanced_plan, contiguous_plan
+from .runtime import RuntimeConfig, RuntimeStats, Source, StreamRuntime
 from .sampling import SampleResult, compact, edgesos
 from .session import Registration, SessionStep, StreamSession
 from .stratify import CHICAGO_BBOX, SHENZHEN_BBOX, StratumTable, make_table, make_table_from_codes
@@ -85,6 +94,7 @@ __all__ = [
     "Accumulator",
     "AggEstimate",
     "AggSpec",
+    "BoundedPaneQueue",
     "CHICAGO_BBOX",
     "ColumnStats",
     "Extrema",
@@ -92,6 +102,7 @@ __all__ = [
     "ControllerState",
     "EdgeCloudPipeline",
     "Estimate",
+    "EventPolicy",
     "FusedPlan",
     "PipelineConfig",
     "Plan",
@@ -99,13 +110,17 @@ __all__ = [
     "QueryResult",
     "Registration",
     "RoutePlan",
+    "RuntimeConfig",
+    "RuntimeStats",
     "SHENZHEN_BBOX",
     "SLO",
     "SampleResult",
     "SessionStep",
+    "Source",
     "StackedSLO",
     "StratumStats",
     "StratumTable",
+    "StreamRuntime",
     "StreamSession",
     "WindowBatch",
     "WindowResult",
@@ -141,8 +156,10 @@ __all__ = [
     "psum_stats",
     "register_accumulator",
     "sketch_quantile",
+    "qdisc",
     "query",
     "routing",
+    "runtime",
     "sample_stats",
     "sampling",
     "session",

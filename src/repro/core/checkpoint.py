@@ -99,6 +99,12 @@ def snapshot(sess) -> dict:
         "pane_index": int(sess.pane_index),
         "total_comm_bytes": int(sess.total_comm_bytes),
         "total_dropped": int(sess.total_dropped),
+        # additive (still version 1): cause -> tuples breakdown of
+        # total_dropped; absent in pre-runtime snapshots, restored as {}
+        "total_dropped_by_cause": {
+            str(k): int(v)
+            for k, v in getattr(sess, "total_dropped_by_cause", {}).items()
+        },
         "total_passes": int(sess.total_passes),
         "registrations": regs,
     }
@@ -168,6 +174,9 @@ def restore(sess, snap) -> None:
     sess.pane_index = int(snap["pane_index"])
     sess.total_comm_bytes = int(snap["total_comm_bytes"])
     sess.total_dropped = int(snap["total_dropped"])
+    sess.total_dropped_by_cause = {
+        str(k): int(v) for k, v in snap.get("total_dropped_by_cause", {}).items()
+    }
     sess.total_passes = int(snap["total_passes"])
 
 

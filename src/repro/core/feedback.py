@@ -21,6 +21,7 @@ to a ceiling on *downstream* volume f·N, not on sampling cost).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import NamedTuple
 
 import jax
@@ -177,6 +178,77 @@ def update_vector(
         re_ema=jnp.where(active, re_ema, state.re_ema),
         steps=state.steps + active.astype(jnp.int32),
     )
+
+
+# -- event-driven sampling (runtime layer) -----------------------------------
+#
+# The SLO controller above closes the loop on *observed error*; the hooks
+# below close it on *change*.  A StreamRuntime watches a registration's
+# per-stratum means pane-over-pane: while the stream is quiet the fraction
+# decays toward an idle floor (quiet regions cost ~nothing), a distribution
+# shift or a periodic heartbeat boosts it back to a hot fraction so the
+# estimator re-converges before the SLO loop would even notice.  The score
+# is computed lazily on-device (no sync in the pane loop); the runtime reads
+# it back one pane late via a non-pane-loop helper.
+
+
+@dataclasses.dataclass(frozen=True)
+class EventPolicy:
+    """Heartbeat + change-trigger policy for one watched registration.
+
+    ``change_threshold`` is a max relative per-stratum mean shift between
+    consecutive panes; crossing it (or ``heartbeat_panes`` elapsing without
+    a probe) boosts the fraction to ``hot_fraction``.  Quiet panes decay the
+    fraction by ``idle_decay`` down to ``idle_fraction``.
+    """
+
+    heartbeat_panes: int = 8
+    change_threshold: float = 0.25
+    hot_fraction: float = 0.8
+    idle_fraction: float = 0.1
+    idle_decay: float = 0.7
+
+
+@dataclasses.dataclass
+class EventState:
+    """Host-side per-registration event bookkeeping (checkpoint-free: it
+    re-warms in one heartbeat interval after a restore)."""
+
+    since_heartbeat: int = 0
+    quiet_panes: int = 0
+    hot_panes: int = 0
+
+
+def change_score(prev_mean: jnp.ndarray, mean: jnp.ndarray) -> jnp.ndarray:
+    """Lazy scalar: max relative per-stratum mean shift between two panes.
+
+    Strata that are empty/non-finite in either pane are ignored; if *no*
+    stratum is comparable the score is ``inf`` — an unobservable stream
+    must fail hot (sample), never idle blind.
+    """
+    prev = jnp.asarray(prev_mean, jnp.float32).ravel()
+    cur = jnp.asarray(mean, jnp.float32).ravel()
+    ok = jnp.isfinite(prev) & jnp.isfinite(cur)
+    denom = jnp.maximum(jnp.abs(prev), 1e-9)
+    rel = jnp.where(ok, jnp.abs(cur - prev) / denom, 0.0)
+    return jnp.where(jnp.any(ok), jnp.max(rel), jnp.inf)
+
+
+def event_fraction(
+    state: EventState, score: float, fraction: float, policy: EventPolicy
+) -> float:
+    """One host-side event-policy step; mutates ``state``, returns the new
+    fraction.  ``score`` is a plain float (the runtime reads the lazy
+    :func:`change_score` back off-device one pane late)."""
+    state.since_heartbeat += 1
+    hot = (not math.isfinite(score)) or score >= policy.change_threshold
+    if hot or state.since_heartbeat >= policy.heartbeat_panes:
+        state.since_heartbeat = 0
+        state.quiet_panes = 0
+        state.hot_panes += 1
+        return float(policy.hot_fraction)
+    state.quiet_panes += 1
+    return float(max(policy.idle_fraction, fraction * policy.idle_decay))
 
 
 def fraction_for_target(

@@ -395,6 +395,10 @@ class EdgeCloudPipeline:
         self._execs: dict[tuple[Query, bool], callable] = {}
         self._passes: dict[tuple[Plan, bool], callable] = {}
         self._refined_passes: dict[tuple, callable] = {}
+        # jitted session emit paths, keyed (query, num_panes): sessions
+        # share these like _passes, so a fresh session over a warmed
+        # pipeline pays no first-pane compile
+        self._finalizers: dict[tuple, callable] = {}
 
     # -- declarative query API ----------------------------------------------
 

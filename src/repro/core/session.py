@@ -133,8 +133,12 @@ class SessionStep(NamedTuple):
       registration.
     comm_bytes: total edge->cloud payload of this pane's shared passes (one
       per fusion group — the fused uplink cost of the whole QuerySet).
-    n_dropped: tuples this pane shed upstream (bounded-buffer windows).
+    n_dropped: tuples shed before this pane reached the device (bounded
+      time windows, ingest-queue backpressure, load shedding).
     pane_index: 0-based index of the pane within the session.
+    drop_causes: cause -> tuple-count breakdown of ``n_dropped`` (causes:
+      ``late`` / ``queue_full`` / ``shed``; uncaused legacy counts land in
+      ``late``).  Do not mutate — it may be the class-level default.
     """
 
     results: dict
@@ -142,6 +146,7 @@ class SessionStep(NamedTuple):
     comm_bytes: int
     n_dropped: int
     pane_index: int
+    drop_causes: dict = {}
 
 
 class StreamSession:
@@ -169,11 +174,16 @@ class StreamSession:
         self.pane_index = 0
         self.total_comm_bytes = 0
         self.total_dropped = 0
+        self.total_dropped_by_cause: dict = {}
         self.total_passes = 0  # edge passes run (one per fusion group per pane)
         self._regs: dict[int, Registration] = {}
         self._next_qid = 0
         self._fused: dict[tuple[Query, ...], FusedPlan] = {}
-        self._finalizers: dict[tuple[Query, int], callable] = {}
+        # jitted emit paths cache on the *pipeline* (like _passes): plan and
+        # table both derive from the pipe, so a fresh session over a warmed
+        # pipe pays zero first-pane compiles — the contract
+        # benchmarks/ingest_throughput.py's warm-up relies on
+        self._finalizers: dict[tuple[Query, int], callable] = pipeline._finalizers
         self._slo_stack: feedback.StackedSLO | None = None
         self._slo_sig: tuple | None = None
 
@@ -374,6 +384,10 @@ class StreamSession:
         if not self._regs:
             raise ValueError("step() on a session with no registered queries")
         n_dropped = int(getattr(pane, "n_dropped", 0))
+        drop_causes = dict(getattr(pane, "drop_causes", None) or {})
+        uncaused = n_dropped - sum(drop_causes.values())
+        if uncaused > 0:  # legacy producers: window-level sheds count as late
+            drop_causes["late"] = drop_causes.get("late", 0) + uncaused
         emitted: dict[int, QueryResult] = {}
         comm_total = 0
         for members in self._groups():
@@ -430,12 +444,17 @@ class StreamSession:
         self.pane_index += 1
         self.total_comm_bytes += comm_total
         self.total_dropped += n_dropped
+        for cause, n in drop_causes.items():
+            self.total_dropped_by_cause[cause] = (
+                self.total_dropped_by_cause.get(cause, 0) + n
+            )
         return SessionStep(
             results=emitted,
             fractions={r.qid: r.fraction for r in self._regs.values()},
             comm_bytes=comm_total,
             n_dropped=n_dropped,
             pane_index=self.pane_index - 1,
+            drop_causes=drop_causes,
         )
 
     def run(self, panes, key=None) -> list[SessionStep]:

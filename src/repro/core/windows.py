@@ -85,8 +85,16 @@ class WindowBatch:
     """One window (or pane) of tuples, fixed shape (N,) + validity mask.
 
     ``n_dropped`` counts tuples that arrived for this window but were shed
-    because the static capacity was exceeded (bounded-buffer semantics of
-    :func:`time_windows`); always 0 for count-triggered windows.
+    before it reached the device; ``drop_causes`` breaks that count down by
+    *why* (cause -> tuples).  Producers tag their own cause:
+
+      ``late``        bounded-buffer capacity overflow in :func:`time_windows`
+      ``queue_full``  ingest-queue backpressure (:mod:`.qdisc` policies)
+      ``shed``        load-shedding decimation under queue saturation
+
+    Count-triggered windows report an explicit ``n_dropped=0`` / empty
+    ``drop_causes`` (never "missing"), so downstream accounting can always
+    sum across sources and causes.
     """
 
     sensor_id: np.ndarray
@@ -97,6 +105,7 @@ class WindowBatch:
     valid: np.ndarray
     extra: dict = dataclasses.field(default_factory=dict)
     n_dropped: int = 0
+    drop_causes: dict = dataclasses.field(default_factory=dict)
 
     @property
     def size(self) -> int:
@@ -119,7 +128,11 @@ def _pad(arr: np.ndarray, capacity: int) -> np.ndarray:
 
 
 def _make_batch(
-    cat: dict, valid: np.ndarray, pad_to: int | None = None, n_dropped: int = 0
+    cat: dict,
+    valid: np.ndarray,
+    pad_to: int | None = None,
+    n_dropped: int = 0,
+    cause: str = "late",
 ) -> WindowBatch:
     def col(k):
         a = cat[k]
@@ -135,6 +148,7 @@ def _make_batch(
         valid=valid,
         extra=extra,
         n_dropped=n_dropped,
+        drop_causes={cause: n_dropped} if n_dropped else {},
     )
 
 
@@ -172,7 +186,9 @@ def count_windows(stream: Iterator[dict], window_size: int) -> Iterator[WindowBa
             for k in buf:
                 buf[k] = [rest[k]]
             have -= window_size
-            yield _make_batch(head, np.ones(window_size, dtype=bool))
+            # count windows never shed: report an explicit zero (not a
+            # missing field) so drop accounting sums cleanly across sources
+            yield _make_batch(head, np.ones(window_size, dtype=bool), n_dropped=0)
 
 
 def time_windows(

@@ -1,6 +1,13 @@
 """Data substrate: synthetic geo-referenced streams + LM token streams."""
 
+from .sources import BurstySource, PacedSource
 from .streams import chicago_aq_stream, shenzhen_taxi_stream
 from .tokens import StratifiedTokenStream
 
-__all__ = ["chicago_aq_stream", "shenzhen_taxi_stream", "StratifiedTokenStream"]
+__all__ = [
+    "BurstySource",
+    "PacedSource",
+    "chicago_aq_stream",
+    "shenzhen_taxi_stream",
+    "StratifiedTokenStream",
+]

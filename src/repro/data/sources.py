@@ -1,0 +1,94 @@
+"""Arrival-process simulators: paced and bursty pane sources for the runtime.
+
+A :class:`~repro.core.runtime.StreamRuntime` consumes any iterable of
+``WindowBatch`` panes; the window iterators over ``streams.py`` generators
+already provide the *content*.  These wrappers add the *arrival process* —
+the paper's §5.2.4 observation that edge traffic is bursty, not paced — by
+sleeping between yields on the producer thread:
+
+  * :class:`PacedSource` — near-constant inter-arrival delay with optional
+    seeded jitter: models a steady sensor feed, and is the honest baseline
+    for the synchronous-vs-pipelined benchmark (both drivers experience the
+    same arrival schedule).
+  * :class:`BurstySource` — panes arrive in back-to-back bursts separated
+    by idle gaps: models the taxi-fleet rush that saturates the ingest
+    queue and exercises backpressure/shedding.
+
+Delays are drawn once, up front, from a seeded ``numpy`` generator, so a
+given ``(seed, n)`` always produces the same schedule.  This module lives in
+``data/`` (not ``core/``) deliberately: host RNG is banned from the core
+import closure (edgelint EDG001), and the runtime never imports it.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Iterable, Iterator, Sequence
+
+import numpy as np
+
+
+def _materialize(panes: Iterable) -> list:
+    return list(panes)
+
+
+class PacedSource:
+    """Yield ``panes`` with a (jittered) constant inter-arrival delay.
+
+    ``jitter`` is the relative half-width of a uniform perturbation:
+    delay_i ~ U[(1-jitter), (1+jitter)] * mean_delay_s, seeded.
+    ``repeat`` cycles the pane list that many times (schedule stays
+    deterministic — delays are drawn for the full repeated length).
+    """
+
+    def __init__(
+        self,
+        panes: Sequence | Iterable,
+        mean_delay_s: float,
+        jitter: float = 0.0,
+        seed: int = 0,
+        repeat: int = 1,
+    ):
+        self.panes = _materialize(panes) * int(repeat)
+        rng = np.random.default_rng(seed)
+        lo, hi = 1.0 - jitter, 1.0 + jitter
+        self.delays = mean_delay_s * rng.uniform(lo, hi, size=len(self.panes))
+
+    def __iter__(self) -> Iterator:
+        for pane, delay in zip(self.panes, self.delays):
+            if delay > 0:
+                time.sleep(float(delay))
+            yield pane
+
+
+class BurstySource:
+    """Yield ``panes`` in bursts: ``burst`` back-to-back panes, then an idle
+    gap of ``gap_s`` (jittered, seeded).  With a gap shorter than the
+    per-burst compute time this reliably saturates a bounded ingest queue.
+    """
+
+    def __init__(
+        self,
+        panes: Sequence | Iterable,
+        burst: int = 4,
+        gap_s: float = 0.01,
+        jitter: float = 0.5,
+        seed: int = 0,
+        repeat: int = 1,
+    ):
+        if burst < 1:
+            raise ValueError(f"burst must be >= 1; got {burst}")
+        self.panes = _materialize(panes) * int(repeat)
+        self.burst = int(burst)
+        n_gaps = (len(self.panes) + self.burst - 1) // self.burst
+        rng = np.random.default_rng(seed)
+        lo, hi = 1.0 - jitter, 1.0 + jitter
+        self.gaps = gap_s * rng.uniform(lo, hi, size=max(n_gaps, 1))
+
+    def __iter__(self) -> Iterator:
+        for i, pane in enumerate(self.panes):
+            if i and i % self.burst == 0:
+                gap = self.gaps[i // self.burst - 1]
+                if gap > 0:
+                    time.sleep(float(gap))
+            yield pane

@@ -32,11 +32,23 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .ref import _moment_rows
-
 N_BLOCK = 512
 S_BLOCK = 512
 ROW_ALIGN = 8  # f32 sublane multiple for the (R, S_blk) accumulator tile
+
+
+def _moment_rows(values: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Stack [m, m·y_c, m·y_c²] rows for a (C, N) column block -> (1+2C, N).
+
+    The single definition of the row layout shared by the Pallas kernel and
+    the segment fast path in ``ops.py`` — the host-side slice offsets (rows
+    1..C are Σy, rows C+1..2C are Σy²) depend on this ordering.  The numpy
+    oracle in ``ref.py`` mirrors it independently (refs are jax-free).
+    """
+    m = mask.astype(jnp.float32)
+    v = values.astype(jnp.float32)
+    my = m[None, :] * v
+    return jnp.concatenate([m[None, :], my, my * v], axis=0)
 
 
 def _reduce_kernel(sidx_ref, rows_ref, out_ref):

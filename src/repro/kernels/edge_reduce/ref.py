@@ -1,46 +1,29 @@
-"""Oracles: per-column segment sums (legacy) and one-pass stacked reduce.
+"""Oracle: stacked per-stratum power sums in pure numpy.
 
-``edge_reduce_ref`` is the bit-level oracle for the Pallas kernel *and* the
-portable fused fast path: all 1+2C moment rows go through ONE
-``segment_sum`` (a single sort/scatter pass over the window) instead of the
-3·C independent segment reductions of the per-column path.
+Jax-free by contract (edgelint EDG006): the reference must not share code —
+or bugs — with the ops side.  Accumulation is f32 in input order
+(``np.add.at``), matching the kernel's accumulation dtype; order-of-summation
+differences vs the device reductions are covered by the parity tolerances.
 """
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+import numpy as np
 
 
-def _moment_rows(values: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
-    """Stack [m, m·y_c, m·y_c²] rows for a (C, N) column block -> (1+2C, N).
-
-    The single definition of the row layout shared by the Pallas kernel and
-    the oracles — the host-side slice offsets (rows 1..C are Σy, rows
-    C+1..2C are Σy²) depend on this ordering.
-    """
-    m = mask.astype(jnp.float32)
-    v = values.astype(jnp.float32)
+def _moment_rows_np(values: np.ndarray, mask: np.ndarray) -> np.ndarray:
+    """Stack [m, m\u00b7y_c, m\u00b7y_c\u00b2] rows for a (C, N) column block -> (1+2C, N)."""
+    m = np.asarray(mask).astype(np.float32)
+    v = np.asarray(values).astype(np.float32)
     my = m[None, :] * v
-    return jnp.concatenate([m[None, :], my, my * v], axis=0)
+    return np.concatenate([m[None, :], my, my * v], axis=0)
 
 
 def edge_reduce_ref(stratum_idx, values, mask, num_slots: int):
-    """Single-pass stacked oracle: one (N, R) segment_sum for all columns."""
-    c = values.shape[0]
-    rows = _moment_rows(values, mask)  # (1+2C, N)
-    out = jax.ops.segment_sum(rows.T, stratum_idx, num_segments=num_slots)  # (S, R)
+    """-> (count (S,), s1 (C, S), s2 (C, S)) raw per-stratum power sums."""
+    sidx = np.asarray(stratum_idx).astype(np.int64)
+    c = np.asarray(values).shape[0]
+    rows = _moment_rows_np(values, mask)  # (1+2C, N)
+    out = np.zeros((num_slots, rows.shape[0]), np.float32)  # (S, R)
+    np.add.at(out, sidx, rows.T)
     return out[:, 0], out[:, 1 : 1 + c].T, out[:, 1 + c : 1 + 2 * c].T
-
-
-def edge_reduce_percol(stratum_idx, values, mask, num_slots: int):
-    """The per-column segment path (3 reductions per column) — the baseline
-    the fused kernel is benchmarked against."""
-    m = mask.astype(jnp.float32)
-    count = jax.ops.segment_sum(m, stratum_idx, num_segments=num_slots)
-    s1, s2 = [], []
-    for col in values:
-        y = col.astype(jnp.float32)
-        s1.append(jax.ops.segment_sum(m * y, stratum_idx, num_segments=num_slots))
-        s2.append(jax.ops.segment_sum(m * y * y, stratum_idx, num_segments=num_slots))
-    return count, jnp.stack(s1), jnp.stack(s2)

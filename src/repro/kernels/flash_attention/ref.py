@@ -1,20 +1,35 @@
-"""Oracle: dense causal SDPA with GQA (pure jnp, f32 softmax)."""
+"""Oracle: dense causal SDPA with GQA in pure numpy (f32 softmax).
+
+Jax-free by contract (edgelint EDG006).  Inputs convert through
+``np.asarray`` (low-precision jax arrays arrive as their ``ml_dtypes``
+numpy dtypes); all math runs in f32, with the softmax weights rounded
+through the value dtype — mirroring the kernel's ``w.astype(v.dtype)``
+recombination — and the output cast back to the input dtype.
+"""
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+import numpy as np
 
 
 def flash_attention_ref(q, k, v):
     """q: (B, S, H, dh); k/v: (B, S, K, dh); H = K * G. Causal."""
-    B, S, H, dh = q.shape
-    K = k.shape[2]
+    q_np, k_np, v_np = np.asarray(q), np.asarray(k), np.asarray(v)
+    in_dtype = v_np.dtype
+    qf = q_np.astype(np.float32)
+    kf = k_np.astype(np.float32)
+    vf = v_np.astype(np.float32)
+    B, S, H, dh = qf.shape
+    K = kf.shape[2]
     G = H // K
-    qg = q.reshape(B, S, K, G, dh)
-    s = jnp.einsum("bqkgd,btkd->bkgqt", qg, k).astype(jnp.float32) / (dh**0.5)
-    mask = jnp.tril(jnp.ones((S, S), bool))
-    s = jnp.where(mask, s, -1e30)
-    w = jax.nn.softmax(s, axis=-1).astype(v.dtype)
-    o = jnp.einsum("bkgqt,btkd->bqkgd", w, v)
-    return o.reshape(B, S, H, dh)
+    qg = qf.reshape(B, S, K, G, dh)
+    s = np.einsum("bqkgd,btkd->bkgqt", qg, kf) / np.float32(dh**0.5)
+    mask = np.tril(np.ones((S, S), bool))
+    s = np.where(mask, s, np.float32(-1e30))
+    s = s - s.max(axis=-1, keepdims=True)
+    e = np.exp(s)
+    w = e / e.sum(axis=-1, keepdims=True)
+    # round weights through the kernel's recombination dtype, then back up
+    w = w.astype(in_dtype).astype(np.float32)
+    o = np.einsum("bkgqt,btkd->bqkgd", w, vf)
+    return o.reshape(B, S, H, dh).astype(in_dtype)

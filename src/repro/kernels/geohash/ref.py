@@ -1,7 +1,57 @@
-"""Oracle: the core library's (pure jnp) geohash encoder."""
+"""Oracle: self-contained numpy Morton geohash encoder.
 
-from ...core import geohash as _g
+Jax-free by contract (edgelint EDG006) — this is an independent port of the
+device encoder in ``repro.core.geohash``, not a delegation to it, so the
+parity test actually compares two implementations.  It must stay BIT-EXACT
+with the jnp path: quantization is the same single-multiply form (f32
+subtract, f32 precomputed scale, truncating int32 cast, clip) and the bit
+spread is the same uint32 mask chain, all of which are IEEE/bitwise
+identical between numpy and XLA.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+LAT_MIN, LAT_MAX = -90.0, 90.0
+LON_MIN, LON_MAX = -180.0, 180.0
+
+MAX_PRECISION = 6  # 30 bits; uint32 codes
+
+
+def _split_bits(precision: int) -> tuple[int, int]:
+    """(lon_bits, lat_bits): longitude gets the extra bit at odd width."""
+    total = 5 * precision
+    return (total + 1) // 2, total // 2
+
+
+def _part1by1(x: np.ndarray) -> np.ndarray:
+    """Spread the low 16 bits of ``x`` to even bit positions (Morton)."""
+    x = x.astype(np.uint32) & np.uint32(0x0000FFFF)
+    x = (x | (x << np.uint32(8))) & np.uint32(0x00FF00FF)
+    x = (x | (x << np.uint32(4))) & np.uint32(0x0F0F0F0F)
+    x = (x | (x << np.uint32(2))) & np.uint32(0x33333333)
+    x = (x | (x << np.uint32(1))) & np.uint32(0x55555555)
+    return x
 
 
 def encode_ref(lat, lon, precision: int):
-    return _g.encode(lat, lon, precision)
+    """Encode coordinates to uint32 geohash codes (numpy, vectorized)."""
+    if not 1 <= precision <= MAX_PRECISION:
+        raise ValueError(f"precision must be in [1, {MAX_PRECISION}], got {precision}")
+    lat = np.asarray(lat, dtype=np.float32)
+    lon = np.asarray(lon, dtype=np.float32)
+    lon_bits, lat_bits = _split_bits(precision)
+    lat_scale = np.float32((1 << lat_bits) / (LAT_MAX - LAT_MIN))
+    lon_scale = np.float32((1 << lon_bits) / (LON_MAX - LON_MIN))
+    lat_i = np.clip(
+        ((lat - np.float32(LAT_MIN)) * lat_scale).astype(np.int32), 0, (1 << lat_bits) - 1
+    ).astype(np.uint32)
+    lon_i = np.clip(
+        ((lon - np.float32(LON_MIN)) * lon_scale).astype(np.int32), 0, (1 << lon_bits) - 1
+    ).astype(np.uint32)
+    if (5 * precision) % 2 == 0:
+        # MSB (odd positions) = lon, even positions = lat.
+        return (_part1by1(lon_i) << np.uint32(1)) | _part1by1(lat_i)
+    # odd width: lon on even positions (incl. MSB), lat on odd.
+    return _part1by1(lon_i) | (_part1by1(lat_i) << np.uint32(1))

@@ -1,12 +1,18 @@
-"""Oracle: gather + threshold (pure jnp)."""
+"""Oracle: gather + threshold Bernoulli mask in pure numpy.
+
+Jax-free by contract (edgelint EDG006); all arithmetic is f32 to match the
+device path's dtype discipline.
+"""
 
 from __future__ import annotations
 
-import jax.numpy as jnp
+import numpy as np
 
 
 def sample_mask_ref(stratum_idx, uniforms, fractions):
-    f = fractions[stratum_idx]
-    keep = uniforms < f
-    w = jnp.where(keep, 1.0 / jnp.maximum(f, 1e-9), 0.0)
+    sidx = np.asarray(stratum_idx)
+    u = np.asarray(uniforms).astype(np.float32)
+    f = np.asarray(fractions).astype(np.float32)[sidx]
+    keep = u < f
+    w = np.where(keep, np.float32(1.0) / np.maximum(f, np.float32(1e-9)), np.float32(0.0))
     return keep, w

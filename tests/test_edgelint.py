@@ -333,6 +333,71 @@ def test_edg005_fires_when_sharding_declares_no_vocabulary(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# EDG006 — ref purity (oracles are jax-free, self-contained numpy)
+# ---------------------------------------------------------------------------
+
+
+def test_edg006_fires_on_jax_import_in_ref(tmp_path):
+    res = lint_tree(
+        tmp_path,
+        {
+            "src/repro/kernels/jaxy/__init__.py": "",
+            "src/repro/kernels/jaxy/ops.py": KERNEL_OPS,
+            "src/repro/kernels/jaxy/ref.py": (
+                "import jax\n"
+                "import jax.numpy as jnp\n"
+                "def fused_reduce_ref(stratum_idx, values, mask, num_slots):\n"
+                "    return jnp.asarray(stratum_idx)\n"
+            ),
+        },
+    )
+    found = [f for f in res.findings if f.code == "EDG006"]
+    assert len(found) == 2  # one per jax import line
+    assert all("jax-free" in f.message for f in found)
+
+
+def test_edg006_fires_on_relative_and_in_repo_imports(tmp_path):
+    res = lint_tree(
+        tmp_path,
+        {
+            "src/repro/kernels/deleg/__init__.py": "",
+            "src/repro/kernels/deleg/ops.py": KERNEL_OPS,
+            "src/repro/kernels/deleg/ref.py": (
+                "from ...core import geohash as _g\n"
+                "import repro.core.estimators\n"
+                "def fused_reduce_ref(stratum_idx, values, mask, num_slots):\n"
+                "    return _g.encode(values, values, 5)\n"
+            ),
+        },
+    )
+    found = [f for f in res.findings if f.code == "EDG006"]
+    assert any("relative import" in f.message for f in found)
+    assert any("in-repo import" in f.message for f in found)
+
+
+def test_edg006_clean_on_numpy_ref_and_non_ref_jax(tmp_path):
+    """numpy/ml_dtypes/stdlib refs pass; jax in ops.py is not EDG006's business."""
+    res = lint_tree(
+        tmp_path,
+        {
+            "src/repro/kernels/pure/__init__.py": "",
+            "src/repro/kernels/pure/ops.py": "import jax\n" + KERNEL_OPS,
+            "src/repro/kernels/pure/ref.py": (
+                "from __future__ import annotations\n"
+                "import math\n"
+                "import numpy as np\n"
+                "import ml_dtypes\n"
+                "def fused_reduce_ref(stratum_idx, values, mask, num_slots):\n"
+                "    return np.asarray(stratum_idx) * math.pi\n"
+            ),
+            # a ref.py outside kernels/ is out of scope too
+            "src/repro/core/ref.py": "import jax\n",
+        },
+    )
+    assert "EDG006" not in codes(res)
+
+
+# ---------------------------------------------------------------------------
 # The production contract: the real tree is clean, suppressions bounded
 # ---------------------------------------------------------------------------
 

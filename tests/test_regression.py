@@ -1,0 +1,87 @@
+"""Benchmark regression gate (benchmarks/regression.py): tolerance floors,
+absolute min/max contract gates, and the static trend page's no-CDN pledge."""
+
+import json
+from pathlib import Path
+
+from benchmarks import regression
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def _gate(tmp_path, measured: dict, gates: dict, tolerance=0.2):
+    mpath = tmp_path / "BENCH_x.json"
+    mpath.write_text(json.dumps(measured))
+    bpath = tmp_path / "baselines.json"
+    bpath.write_text(json.dumps({"tolerance": tolerance, "BENCH_x.json": gates}))
+    return regression.check([str(mpath)], str(bpath))
+
+
+def test_tolerance_floor_passes_and_fails(tmp_path):
+    ok, _ = _gate(tmp_path, {"speedup": 3.0}, {"speedup": 3.5})  # floor 2.8
+    assert ok == []
+    bad, _ = _gate(tmp_path, {"speedup": 2.0}, {"speedup": 3.5})
+    assert len(bad) == 1 and "regressed" in bad[0]
+
+
+def test_absolute_min_gate_ignores_tolerance(tmp_path):
+    # contract: >= 1.3 exactly, not >= (1 - tol) * 1.3
+    bad, report = _gate(tmp_path, {"runtime_speedup": 1.25}, {"runtime_speedup": {"min": 1.3}})
+    assert len(bad) == 1 and "absolute floor" in bad[0]
+    ok, report = _gate(tmp_path, {"runtime_speedup": 1.31}, {"runtime_speedup": {"min": 1.3}})
+    assert ok == []
+    assert any("absolute" in line and "OK" in line for line in report)
+
+
+def test_absolute_max_gate_is_a_ceiling(tmp_path):
+    ok, _ = _gate(tmp_path, {"p99_ms": 120.0}, {"p99_ms": {"max": 400}})
+    assert ok == []
+    bad, _ = _gate(tmp_path, {"p99_ms": 900.0}, {"p99_ms": {"max": 400}})
+    assert len(bad) == 1 and "absolute ceiling" in bad[0]
+
+
+def test_missing_and_malformed_gates_fail_loudly(tmp_path):
+    bad, _ = _gate(tmp_path, {"other": 1.0}, {"renamed_metric": {"min": 1.0}})
+    assert any("missing" in f for f in bad)
+    bad, _ = _gate(tmp_path, {"m": 1.0}, {"m": {"min": 1.0, "max": 2.0}})
+    assert any("malformed" in f for f in bad)
+    bad, _ = _gate(tmp_path, {"m": 1.0}, {"m": {"target": 1.0}})
+    assert any("malformed" in f for f in bad)
+
+
+def test_committed_baselines_parse_and_gate_shapes_are_valid(tmp_path):
+    """Every gate in the committed baselines.json is a number or a
+    well-formed {"min"|"max": x} object (a typo'd gate must fail in tests,
+    not silently in CI)."""
+    baselines = json.loads((REPO_ROOT / "benchmarks" / "baselines.json").read_text())
+    sections = {k: v for k, v in baselines.items() if k.startswith("BENCH_")}
+    assert "BENCH_ingest.json" in sections
+    assert sections["BENCH_ingest.json"]["runtime_speedup"]["min"] >= 1.3
+    for name, gates in sections.items():
+        # satisfying every gate exactly at its bound must pass
+        measured = {}
+        for key, g in gates.items():
+            if isinstance(g, dict):
+                assert set(g) in ({"min"}, {"max"}), f"{name}:{key} malformed {g!r}"
+                measured[key] = float(next(iter(g.values())))
+            else:
+                measured[key] = float(g)
+        mpath = tmp_path / name
+        mpath.write_text(json.dumps(measured))
+        failures, _ = regression.check(
+            [str(mpath)], str(REPO_ROOT / "benchmarks" / "baselines.json")
+        )
+        assert failures == [], failures
+
+
+def test_trend_page_is_self_contained():
+    """benchmarks/trend.html must stay CDN-free (gh-pages renders it with no
+    third-party fetches) and read the history file trend.py writes."""
+    page = (REPO_ROOT / "benchmarks" / "trend.html").read_text()
+    assert "bench-history.json" in page
+    assert "<svg" in page or 'createElementNS' in page  # inline SVG rendering
+    for marker in ("http://", "https://"):
+        for line in page.splitlines():
+            if marker in line:
+                # the only absolute URL allowed is the SVG namespace constant
+                assert "www.w3.org" in line, f"external reference: {line.strip()}"

@@ -1,6 +1,6 @@
 """edgelint rule battery — importing a rule module registers its checker."""
 
-from . import accumulators, collectives, determinism, host_sync, kernel_triad
+from . import accumulators, collectives, determinism, host_sync, kernel_triad, ref_purity
 
 __all__ = [
     "accumulators",
@@ -8,4 +8,5 @@ __all__ = [
     "determinism",
     "host_sync",
     "kernel_triad",
+    "ref_purity",
 ]

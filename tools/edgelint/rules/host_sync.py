@@ -57,6 +57,19 @@ JIT_WRAPPERS = {
 PANE_LOOP_FUNCTIONS = {
     "src/repro/core/session.py": {"step", "run", "_emit"},
     "src/repro/core/pipeline.py": {"run_stream"},
+    # the async runtime's dispatch path must stay sync-free un-suppressed;
+    # its one blocking boundary (_retire) and the deferred event readback
+    # (_read_score) are deliberately *not* pane-loop functions
+    "src/repro/core/runtime.py": {
+        "run",
+        "process",
+        "_consume",
+        "_stage",
+        "_dispatch",
+        "flush",
+        "_pump",
+        "offer",
+    },
 }
 
 PANE_LOOP_MARK = re.compile(r"#\s*edgelint:\s*pane-loop\b")

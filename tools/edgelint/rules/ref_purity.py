@@ -1,0 +1,99 @@
+"""EDG006 — ref purity: kernel oracles are jax-free, self-contained numpy.
+
+``kernels/<name>/ref.py`` is the oracle the parity suite diffs the Pallas
+kernel against.  An oracle that imports jax shares a compiler — and a bug —
+with the thing it is supposed to check: an XLA miscompile, a dtype-promotion
+change, or a shared helper rewrite moves both sides in lockstep and the
+parity test stays green through a real regression.  An oracle that imports
+from elsewhere in the repo (``from ...core import geohash``) is worse: it can
+*delegate* to the very device path under test, making parity tautological.
+
+The contract, per ``ref.py`` module:
+
+* no jax import in any form (``import jax``, ``import jax.numpy as jnp``,
+  ``from jax...`` — including indirect jax frontends like flax/optax);
+* no relative import (``from . import ...``, ``from ...core import ...``)
+  and no absolute in-repo import (``repro.*``): refs must be self-contained;
+* numpy, ``ml_dtypes`` (for low-precision rounding fidelity — it is a
+  plain-numpy dtype package, not a compiler), and the stdlib are the whole
+  allowed surface.
+
+The rule is import-level, not call-level: a jax *call* without an import
+cannot typecheck anyway, and import-level scanning keeps findings anchored
+to the one line a reviewer must delete.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from ..framework import Finding, Module, Project, Rule, register_rule
+
+BANNED_ROOTS = {"jax", "jaxlib", "flax", "optax", "chex"}
+REPO_ROOTS = {"repro", "src"}
+
+
+def _root(name: str) -> str:
+    return name.split(".", 1)[0]
+
+
+class RefPurityRule(Rule):
+    code = "EDG006"
+    name = "ref-purity"
+    guarantee = (
+        "kernels/*/ref.py oracles are jax-free, self-contained numpy — no "
+        "jax imports, no relative or in-repo imports"
+    )
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        for mod in project.modules:
+            parts = mod.relpath.split("/")
+            if parts[-1] != "ref.py" or "kernels" not in parts[:-1]:
+                continue
+            yield from self._check_module(mod)
+
+    def _check_module(self, mod: Module) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    yield from self._check_name(mod, node, alias.name)
+            elif isinstance(node, ast.ImportFrom):
+                if node.level:  # any relative import reaches back into the repo
+                    dots = "." * node.level
+                    yield Finding(
+                        self.code,
+                        f"relative import `from {dots}{node.module or ''} "
+                        "import ...` in a kernel ref: oracles must be "
+                        "self-contained (no in-repo imports — a ref that "
+                        "delegates to the tree under test proves nothing)",
+                        mod.relpath,
+                        node.lineno,
+                        node.col_offset,
+                    )
+                elif node.module and node.module != "__future__":
+                    yield from self._check_name(mod, node, node.module)
+
+    def _check_name(self, mod: Module, node: ast.stmt, name: str) -> Iterator[Finding]:
+        root = _root(name)
+        if root in BANNED_ROOTS:
+            yield Finding(
+                self.code,
+                f"`{name}` import in a kernel ref: oracles must be jax-free "
+                "numpy so parity failures implicate exactly one side",
+                mod.relpath,
+                node.lineno,
+                node.col_offset,
+            )
+        elif root in REPO_ROOTS:
+            yield Finding(
+                self.code,
+                f"in-repo import `{name}` in a kernel ref: oracles must be "
+                "self-contained (no repro.* imports)",
+                mod.relpath,
+                node.lineno,
+                node.col_offset,
+            )
+
+
+register_rule(RefPurityRule())

@@ -105,11 +105,20 @@ def _last_estimates(history):
 
 
 def small_metrics(
-    n_panes: int = 24, pane_tuples: int = 8_000, fraction: float = 0.8
+    n_panes: int = 24, pane_tuples: int = 8_000, fraction: float = 0.8,
+    backend: str = "segment",
 ) -> dict:
-    """Fixed small-configuration sync-vs-runtime metrics for CI gating."""
+    """Fixed small-configuration sync-vs-runtime metrics for CI gating.
+
+    ``backend`` selects the edge reduction implementation
+    (``segment | pallas | fused`` — see :class:`PipelineConfig`); the
+    CI-gated configuration stays on the ``segment`` default, ``--backend
+    fused`` A/Bs the single-traversal megakernel path under the same
+    paced-pane driver."""
     table = make_table(*SHENZHEN_BBOX, precision=5)
-    pipe = EdgeCloudPipeline(table, PipelineConfig(raw_capacity=pane_tuples))
+    pipe = EdgeCloudPipeline(
+        table, PipelineConfig(raw_capacity=pane_tuples, backend=backend)
+    )
     stream = shenzhen_taxi_stream(chunk_size=pane_tuples, num_chunks=n_panes, seed=0)
     panes = list(windows.count_windows(stream, pane_tuples))[:n_panes]
     root = jax.random.key(7)
@@ -162,6 +171,7 @@ def small_metrics(
             "fraction": fraction,
             "pacing_ms": delay_s * 1e3,
             "precision": 5,
+            "backend": backend,
         },
         "sync_wall_s": sync_wall,
         "runtime_wall_s": rt_wall,
@@ -179,19 +189,31 @@ def small_metrics(
 
 
 def main() -> None:
-    """Standalone entry: ``python -m benchmarks.ingest_throughput [--json PATH]``.
+    """Standalone entry: ``python -m benchmarks.ingest_throughput [--json
+    PATH] [--backend segment|pallas|fused]``.
 
     ``--json PATH`` runs the fixed sync-vs-runtime configuration and writes
     the gated metrics to PATH; without it the Fig 8 CSV sweep streams to
-    stdout.
+    stdout.  ``--backend`` selects the pipeline's edge reduction backend
+    for the JSON configuration (default ``segment``, the gated baseline;
+    ``fused`` drives every pane through the single-traversal megakernel).
     """
     import sys
 
+    from repro.core.pipeline import BACKENDS
+
     from .common import json_flag_path, write_metrics_json
 
-    path = json_flag_path(sys.argv[1:])
+    argv = sys.argv[1:]
+    backend = "segment"
+    if "--backend" in argv:
+        i = argv.index("--backend") + 1
+        if i >= len(argv) or argv[i] not in BACKENDS:
+            raise SystemExit(f"usage: --backend {{{'|'.join(BACKENDS)}}}")
+        backend = argv[i]
+    path = json_flag_path(argv)
     if path is not None:
-        metrics = small_metrics()
+        metrics = small_metrics(backend=backend)
         if not metrics["parity_ok"]:
             raise SystemExit("runtime/sync estimate parity failed")
         write_metrics_json(path, metrics, "ingest_throughput")

@@ -619,6 +619,13 @@ class MomentsAccumulator(Accumulator):
     def accumulate(self, values, stratum_idx, mask, num_slots, counts=None):
         return sample_stats(values, stratum_idx, mask, num_slots, counts=counts)
 
+    def from_kernel_rows(self, count, s1, s2, counts):
+        """Optional kernel hook: adapt fused-kernel raw power-sum rows
+        (kept count, Σy, Σy²; population ``counts``) to the state this
+        accumulator's merges/finalize consume.  Not part of the registry
+        protocol — only kinds a kernel emits rows for implement it."""
+        return stats_from_raw_moments(count, s1, s2, counts)
+
     def merge(self, a, b):
         return merge_stats(a, b)
 
@@ -700,6 +707,11 @@ class ExtremaAccumulator(Accumulator):
             max=jax.ops.segment_max(jnp.where(mask, v, -jnp.inf), stratum_idx, num_segments=num_slots),
         )
 
+    def from_kernel_rows(self, mins, maxs) -> Extrema:
+        """Optional kernel hook: wrap fused-kernel extrema rows (±inf
+        identities where a stratum kept nothing)."""
+        return Extrema(min=mins, max=maxs)
+
     def identity(self, num_slots: int) -> Extrema:
         return Extrema(
             min=jnp.full((num_slots,), jnp.inf, jnp.float32),
@@ -760,6 +772,13 @@ class QuantileSketchAccumulator(Accumulator):
             mask.astype(jnp.float32), flat, num_segments=num_slots * SKETCH_NUM_BINS
         )
         return QuantileSketch(bins=bins.reshape(num_slots, SKETCH_NUM_BINS))
+
+    def from_kernel_rows(self, bins) -> QuantileSketch:
+        """Optional kernel hook: wrap fused-kernel (S, NUM_BINS) sketch
+        rows — the binning already happened inside the kernel (the fused
+        backend's single-traversal contract), so this is shape adoption,
+        not re-binning."""
+        return QuantileSketch(bins=bins)
 
     def merge(self, a, b):
         return QuantileSketch(bins=a.bins + b.bins)

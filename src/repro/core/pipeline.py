@@ -74,30 +74,59 @@ from .stratify import StratumTable
 from .windows import WindowBatch
 
 
-BACKENDS = ("segment", "pallas")
+BACKENDS = ("segment", "pallas", "fused")
+
+STAGING_DTYPES = ("float32", "bfloat16")
+
+# registry kinds the megakernel emits stat rows for in one pass; plans
+# referencing any other kind keep the per-kind accumulate path for it
+_FUSED_STAT_KINDS = frozenset({"moments", "extrema", "sketch"})
 
 
 @dataclasses.dataclass(frozen=True)
 class PipelineConfig:
     """Deployment-level defaults; per-query settings live on ``Query``.
 
-    ``backend`` selects the edge moment-reduction implementation:
-    ``"segment"`` (per-column segment ops, portable parity oracle) or
-    ``"pallas"`` (fused multi-column edge-reduce — the Pallas MXU kernel on
-    TPU, its single-pass stacked-segment equivalent elsewhere).  Sampling
-    co-dispatches: ``"pallas"`` on TPU also routes geohash encoding and
-    Bernoulli selection through their kernels.
+    ``backend`` selects the edge reduction implementation:
+
+    * ``"segment"`` — per-column segment ops, the portable parity oracle;
+    * ``"pallas"`` — fused multi-column edge-reduce (the Pallas MXU kernel
+      on TPU, its single-pass stacked-segment equivalent elsewhere);
+      sampling co-dispatches geohash encoding and Bernoulli selection
+      through their kernels on TPU;
+    * ``"fused"`` — the single-traversal edge megakernel
+      (``kernels/edge_megakernel``): geohash + stratify + threshold
+      sampling + moments/extrema/sketch stat rows in ONE Pallas pass per
+      pane — the intermediate ``sidx``/``mask``/one-hot arrays never
+      reach HBM (SRS keeps its rank sort outside, stats still fuse).
+      Off-TPU it lowers to the equivalent stacked segment program.
+
+    ``staging_dtype`` (fused backend only) is the dtype value columns are
+    *staged* in on their way into the kernel — ``"bfloat16"`` halves the
+    value-column VMEM/HBM traffic; every kernel accumulator stays f32
+    (EDG004's contract), so only the input rounding differs.
     """
 
     method: str = "srs"  # srs | bernoulli | neyman  (legacy-API default)
     mode: str = "preagg"  # preagg | raw              (legacy-API default)
     confidence: float = 0.95
     raw_capacity: int | None = None  # static per-shard buffer for raw mode
-    backend: str = "segment"  # segment | pallas (edge reduction backend)
+    backend: str = "segment"  # segment | pallas | fused (edge reduction)
+    staging_dtype: str = "float32"  # float32 | bfloat16 (fused kernel inputs)
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}; got {self.backend!r}")
+        if self.staging_dtype not in STAGING_DTYPES:
+            raise ValueError(
+                f"staging_dtype must be one of {STAGING_DTYPES}; got {self.staging_dtype!r}"
+            )
+        if self.staging_dtype != "float32" and self.backend != "fused":
+            raise ValueError(
+                "staging_dtype is a fused-backend knob: reduced-precision "
+                "staging requires backend='fused' (accumulation stays f32 "
+                "on every backend)"
+            )
 
 
 class WindowResult(NamedTuple):
@@ -171,6 +200,28 @@ def _accumulate_columns(
             stats[c]["moments"] = estimators.stats_from_raw_moments(
                 cnt, s1[i], s2[i], counts
             )
+    elif cfg.backend == "fused":
+        # a given sample's moment/extrema/sketch rows in one megakernel
+        # sweep (sidx mode, keep == mask via the zero-score/one-threshold
+        # degenerate compare); kinds outside the fused set fall through to
+        # the registry loop below
+        from ..kernels.edge_megakernel import edge_megakernel
+
+        ext_idx, sk_idx = _kernel_layout(plan.columns, kinds_map)
+        res = edge_megakernel(
+            _stack_staged(cfg, plan.columns, cols),
+            mask.astype(jnp.float32)[None],
+            jnp.zeros((1,) + mask.shape, jnp.float32),
+            jnp.ones((1, num_slots), jnp.float32),
+            num_slots,
+            sidx=sidx[None],
+            ext_idx=ext_idx,
+            sk_idx=sk_idx,
+        )
+        stats = _stats_from_mega(
+            plan.columns, kinds_map, res, 0, res.keep[0], counts,
+            plan.columns, ext_idx, sk_idx,
+        )
     else:
         for c in plan.columns:
             stats[c]["moments"] = estimators.MOMENTS.accumulate(
@@ -178,10 +229,65 @@ def _accumulate_columns(
             )
     for c in plan.columns:
         for kind in kinds_map[c]:
-            if kind != "moments":
+            if kind not in stats[c]:
                 stats[c][kind] = estimators.accumulator(kind).accumulate(
                     cols[c], sidx, mask, num_slots, counts=counts
                 )
+    return stats
+
+
+def _plan_fusable(plan: Plan) -> bool:
+    """True when every referenced kind has megakernel stat rows — the
+    condition for serving the plan from the single-traversal pass (other
+    kinds need the materialized ``sidx``/``mask`` the megakernel skips)."""
+    kinds_map = plan.column_kind_map
+    return all(set(kinds_map[c]) <= _FUSED_STAT_KINDS for c in plan.columns)
+
+
+def _kernel_layout(columns, kinds_map) -> tuple[tuple, tuple]:
+    """Column positions that get extrema / sketch rows in the megakernel."""
+    ext_idx = tuple(i for i, c in enumerate(columns) if "extrema" in kinds_map.get(c, ()))
+    sk_idx = tuple(i for i, c in enumerate(columns) if "sketch" in kinds_map.get(c, ()))
+    return ext_idx, sk_idx
+
+
+def _stack_staged(cfg: PipelineConfig, columns, cols) -> jnp.ndarray:
+    """Stack value columns in the configured staging dtype (fused backend):
+    bf16 staging halves the kernel's value-column traffic; accumulation is
+    f32 on every path, so only input rounding differs."""
+    dt = jnp.bfloat16 if cfg.staging_dtype == "bfloat16" else jnp.float32
+    return jnp.stack([cols[c] for c in columns]).astype(dt)
+
+
+def _stats_from_mega(
+    columns, kinds_map, res, m, keep, counts, union_cols, ext_idx, sk_idx
+) -> dict:
+    """Adopt member ``m``'s megakernel stat rows into registry states.
+
+    ``columns`` is the member's own column list; positions resolve against
+    ``union_cols`` (the kernel's value-column layout, a superset for refined
+    fused groups).  ``keep`` is the per-slot kept-count row to use as the
+    moment count (callers patch latlon-mode overflow residuals in first).
+    """
+    pos = {c: i for i, c in enumerate(union_cols)}
+    e_pos = {i: e for e, i in enumerate(ext_idx)}
+    k_pos = {i: k for k, i in enumerate(sk_idx)}
+    stats: dict = {}
+    for c in columns:
+        i = pos[c]
+        d = {
+            "moments": estimators.MOMENTS.from_kernel_rows(
+                keep, res.s1[m, i], res.s2[m, i], counts
+            )
+        }
+        for kind in kinds_map.get(c, ()):
+            if kind == "extrema":
+                d[kind] = estimators.EXTREMA.from_kernel_rows(
+                    res.mins[m, e_pos[i]], res.maxs[m, e_pos[i]]
+                )
+            elif kind == "sketch":
+                d[kind] = estimators.SKETCH.from_kernel_rows(res.bins[m, k_pos[i]])
+        stats[c] = d
     return stats
 
 
@@ -209,6 +315,20 @@ def _edge_program(
     if axes is not None:
         key = jax.random.fold_in(key, jax.lax.axis_index(axes))
     ok = valid & aqp.roi_mask(plan, table, lat, lon)
+    if (
+        cfg.backend == "fused"
+        and q.mode != "raw"
+        and _plan_fusable(plan)
+        and q.method in ("srs", "bernoulli")
+        # latlon-mode overflow residuals need a scalar threshold; a
+        # per-stratum Bernoulli fraction falls back to the two-pass path
+        and (q.method == "srs" or jnp.ndim(fraction) == 0)
+    ):
+        stats, n_sampled, n_valid, n_overflow = _fused_member_program(
+            plan, table, cfg, key, lat, lon, cols, ok, valid, fraction, axes
+        )
+        comm = jnp.int32(aqp.preagg_bytes(plan, table.num_slots))
+        return stats, n_sampled, n_valid, n_overflow, jnp.int32(0), comm
     sidx, sample = edge_sample(
         key, table, lat, lon, ok, fraction, q.method, backend=cfg.backend
     )
@@ -259,6 +379,13 @@ def _member_reduce(
     refined member whose mask equals its independent draw gets bit-identical
     states *by construction*, because both paths run this exact program."""
     stats = _accumulate_columns(plan, cfg, cols, sidx, mask, table.num_slots, counts)
+    n_sampled = jnp.sum(mask.astype(jnp.int32))
+    return _consolidate(plan, stats, n_sampled, ok, valid, counts, axes)
+
+
+def _consolidate(plan: Plan, stats, n_sampled, ok, valid, counts, axes):
+    """Shared tail of every preagg path: the consolidating collective over
+    accumulator states plus the sample/validity/overflow counters."""
     if axes is not None:
         merged: dict = {}
         shared = None
@@ -266,7 +393,6 @@ def _member_reduce(
             merged[c] = estimators.psum_accs(stats[c], axes, shared=shared)
             shared = shared if shared is not None else merged[c]["moments"]
         stats = merged
-    n_sampled = jnp.sum(mask.astype(jnp.int32))
     n_valid = jnp.sum(ok.astype(jnp.int32))
     n_overflow = counts[-1] + jnp.sum((valid & ~ok).astype(jnp.int32))
     if axes is not None:
@@ -274,6 +400,71 @@ def _member_reduce(
         n_valid = jax.lax.psum(n_valid, axes)
         n_overflow = jax.lax.psum(n_overflow, axes)
     return stats, n_sampled, n_valid, n_overflow
+
+
+def _fused_member_program(
+    plan: Plan, table: StratumTable, cfg: PipelineConfig, key, lat, lon, cols,
+    ok, valid, fraction, axes,
+):
+    """One plan's preagg reduce as a SINGLE megakernel traversal.
+
+    The megakernel's unified threshold compare reproduces EdgeSOS sampling
+    bit-identically while emitting every fused stat row in the same pass:
+
+      * ``bernoulli`` — the same unsplit-key uniforms
+        :func:`~.sampling.bernoulli_sample` draws become the scores and the
+        scalar fraction the per-slot threshold; membership resolves
+        *in-kernel* from lat/lon against the code table (latlon mode), so
+        no ``sidx``/``mask`` array ever materializes.  Tuples outside the
+        table land in no slot — their stat rows stay zero (the query layer
+        zeroes overflow before estimating) and the overflow *counts* are
+        reconstructed as residuals against direct sums.
+      * ``srs`` — exact ranks need the per-stratum sort, so stratify +
+        :func:`~.sampling.srs_ranks` run outside; ranks vs ``n_k`` is the
+        in-kernel compare (exact below 2**24) and sidx mode covers every
+        slot, overflow included, exactly.
+    """
+    from ..kernels.edge_megakernel import edge_megakernel
+
+    q = plan.query
+    slots = table.num_slots
+    kinds_map = plan.column_kind_map
+    ext_idx, sk_idx = _kernel_layout(plan.columns, kinds_map)
+    vals = _stack_staged(cfg, plan.columns, cols)
+    okf = ok.astype(jnp.float32)[None]
+    if q.method == "bernoulli":
+        u = jax.random.uniform(key, lat.shape)
+        thr = jnp.broadcast_to(jnp.asarray(fraction, jnp.float32), (1, slots))
+        res = edge_megakernel(
+            vals, okf, u[None], thr, slots,
+            lat=lat, lon=lon, codes=table.codes, precision=table.precision,
+            ext_idx=ext_idx, sk_idx=sk_idx,
+        )
+        n_sampled = jnp.sum((ok & (u < fraction)).astype(jnp.int32))
+        counts = res.pop[0].astype(jnp.int32)
+        counts = counts.at[-1].add(jnp.sum(ok.astype(jnp.int32)) - jnp.sum(counts))
+        keep = res.keep[0].at[-1].add(
+            n_sampled.astype(jnp.float32) - jnp.sum(res.keep[0])
+        )
+    else:
+        sidx = jnp.where(
+            ok, table.assign(lat, lon, backend=cfg.backend), table.num_strata
+        )
+        ranks, counts_all = sampling.srs_ranks(key, sidx, slots)
+        n_k = sampling.allocate_proportional(counts_all, fraction)
+        res = edge_megakernel(
+            vals, okf,
+            ranks.astype(jnp.float32)[None], n_k.astype(jnp.float32)[None],
+            slots, sidx=sidx[None], ext_idx=ext_idx, sk_idx=sk_idx,
+        )
+        counts = res.pop[0].astype(jnp.int32)
+        keep = res.keep[0]
+        n_sampled = jnp.sum(keep).astype(jnp.int32)
+    stats = _stats_from_mega(
+        plan.columns, kinds_map, res, 0, keep, counts,
+        plan.columns, ext_idx, sk_idx,
+    )
+    return _consolidate(plan, stats, n_sampled, ok, valid, counts, axes)
 
 
 def _fused_edge_program(
@@ -327,6 +518,10 @@ def _fused_edge_program(
         )
     if axes is not None:
         key = jax.random.fold_in(key, jax.lax.axis_index(axes))
+    if cfg.backend == "fused" and all(_plan_fusable(p) for p in fused.members):
+        return _fused_refined_mega(
+            fused, table, cfg, key, lat, lon, cols, valid, fractions, axes
+        )
     slots = table.num_slots
     sidx_raw = table.assign(lat, lon, backend=cfg.backend)
     members_out = []
@@ -353,6 +548,101 @@ def _fused_edge_program(
             mask = (ranks < n_k[sidx]) & ok
             members_out.append(
                 _member_reduce(plan_m, table, cfg, cols, sidx, mask, ok, valid, counts, axes)
+            )
+    comm = jnp.int32(aqp.refined_preagg_bytes(fused, slots))
+    return tuple(members_out), comm
+
+
+def _fused_refined_mega(
+    fused: aqp.FusedPlan, table: StratumTable, cfg: PipelineConfig, key,
+    lat, lon, cols, valid, fractions, axes,
+):
+    """The refined fused pass as ONE megakernel traversal for ALL members.
+
+    The kernel's member axis carries the per-member thresholds (Bernoulli:
+    each member's fraction; SRS: each member's ``n_k`` allocation) and, for
+    Bernoulli groups, each member's own ROI mask — so the window's value
+    columns are read once for the whole fusion group instead of once per
+    member.  Sampling semantics match :func:`_fused_edge_program`'s segment
+    body decision-for-decision (same uniforms / ranks, same threshold
+    compare); Bernoulli runs in latlon mode with the overflow-residual
+    reconstruction documented on :func:`_fused_member_program`.
+    """
+    from ..kernels.edge_megakernel import edge_megakernel
+
+    shared = fused.shared
+    q = shared.query
+    slots = table.num_slots
+    members = fused.members
+    m_count = len(members)
+    fractions = jnp.asarray(fractions, jnp.float32)
+    # union value-column layout: every member's stats slice out of one pass
+    union_cols: list = []
+    union_kinds: dict = {}
+    for p in members:
+        km = p.column_kind_map
+        for c in p.columns:
+            if c not in union_kinds:
+                union_cols.append(c)
+                union_kinds[c] = set()
+            union_kinds[c] |= set(km[c])
+    ext_idx, sk_idx = _kernel_layout(union_cols, union_kinds)
+    vals = _stack_staged(cfg, union_cols, cols)
+    members_out = []
+    if q.method == "bernoulli":
+        u = jax.random.uniform(key, lat.shape)
+        ok_m = jnp.stack([valid & aqp.roi_mask(p, table, lat, lon) for p in members])
+        scores = jnp.broadcast_to(u[None], (m_count,) + u.shape)
+        thr = jnp.broadcast_to(fractions[:, None], (m_count, slots))
+        res = edge_megakernel(
+            vals, ok_m.astype(jnp.float32), scores, thr, slots,
+            lat=lat, lon=lon, codes=table.codes, precision=table.precision,
+            ext_idx=ext_idx, sk_idx=sk_idx,
+        )
+        for m, plan_m in enumerate(members):
+            ok = ok_m[m]
+            n_sampled = jnp.sum((ok & (u < fractions[m])).astype(jnp.int32))
+            counts = res.pop[m].astype(jnp.int32)
+            counts = counts.at[-1].add(jnp.sum(ok.astype(jnp.int32)) - jnp.sum(counts))
+            keep = res.keep[m].at[-1].add(
+                n_sampled.astype(jnp.float32) - jnp.sum(res.keep[m])
+            )
+            stats = _stats_from_mega(
+                plan_m.columns, plan_m.column_kind_map, res, m, keep, counts,
+                union_cols, ext_idx, sk_idx,
+            )
+            members_out.append(
+                _consolidate(plan_m, stats, n_sampled, ok, valid, counts, axes)
+            )
+    else:  # srs: shared ROI + stratify + ranks, per-member n_k thresholds
+        ok = valid & aqp.roi_mask(shared, table, lat, lon)
+        sidx = jnp.where(
+            ok, table.assign(lat, lon, backend=cfg.backend), table.num_strata
+        )
+        ranks, counts_all = sampling.srs_ranks(key, sidx, slots)
+        thr = jnp.stack(
+            [
+                sampling.allocate_proportional(counts_all, fractions[m]).astype(jnp.float32)
+                for m in range(m_count)
+            ]
+        )
+        res = edge_megakernel(
+            vals,
+            jnp.broadcast_to(ok.astype(jnp.float32)[None], (m_count,) + ok.shape),
+            jnp.broadcast_to(ranks.astype(jnp.float32)[None], (m_count,) + ranks.shape),
+            thr, slots,
+            sidx=jnp.broadcast_to(sidx[None], (m_count,) + sidx.shape),
+            ext_idx=ext_idx, sk_idx=sk_idx,
+        )
+        for m, plan_m in enumerate(members):
+            counts = res.pop[m].astype(jnp.int32)
+            n_sampled = jnp.sum(res.keep[m]).astype(jnp.int32)
+            stats = _stats_from_mega(
+                plan_m.columns, plan_m.column_kind_map, res, m, res.keep[m],
+                counts, union_cols, ext_idx, sk_idx,
+            )
+            members_out.append(
+                _consolidate(plan_m, stats, n_sampled, ok, valid, counts, axes)
             )
     comm = jnp.int32(aqp.refined_preagg_bytes(fused, slots))
     return tuple(members_out), comm

@@ -13,13 +13,35 @@ hot loop.  On TPU those become:
                     ``PipelineConfig(backend="pallas")``
   sample_mask/      fused per-stratum threshold gather (one-hot MXU) +
                     Bernoulli keep mask + Horvitz-Thompson weights
+  edge_megakernel/  the single-traversal fusion of the whole per-tuple
+                    pipeline: in-kernel geohash + stratify + threshold
+                    sampling + moments/extrema/sketch stat rows in ONE
+                    pass — the hot path behind
+                    ``PipelineConfig(backend="fused")``
   flash_attention/  blocked causal attention for the LM serving substrate
 
 Every kernel has ops.py (jit'd wrapper with an interpret switch) and
 ref.py (pure-jnp oracle); tests sweep shapes/dtypes in interpret mode and
-assert allclose against the oracle.
+assert allclose against the oracle.  Block tilings live in tiling.py
+(single source, override hook for TPU tuning).
 """
 
-from . import edge_reduce, flash_attention, geohash, sample_mask, stratified_stats
+from . import (
+    edge_megakernel,
+    edge_reduce,
+    flash_attention,
+    geohash,
+    sample_mask,
+    stratified_stats,
+    tiling,
+)
 
-__all__ = ["edge_reduce", "flash_attention", "geohash", "sample_mask", "stratified_stats"]
+__all__ = [
+    "edge_megakernel",
+    "edge_reduce",
+    "flash_attention",
+    "geohash",
+    "sample_mask",
+    "stratified_stats",
+    "tiling",
+]

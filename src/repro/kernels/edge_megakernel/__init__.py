@@ -1,0 +1,4 @@
+from .edge_megakernel import MegaResult
+from .ops import edge_megakernel
+
+__all__ = ["MegaResult", "edge_megakernel"]

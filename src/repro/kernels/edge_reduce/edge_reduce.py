@@ -32,9 +32,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-N_BLOCK = 512
-S_BLOCK = 512
-ROW_ALIGN = 8  # f32 sublane multiple for the (R, S_blk) accumulator tile
+# Sourced from the shared tiling table (kernels/tiling.py); re-exported
+# here so existing `from ...edge_reduce import N_BLOCK` imports keep
+# working.  ROW_ALIGN: f32 sublane multiple for the (R, S_blk) tile.
+from ..tiling import ROW_ALIGN, kernel_blocks
+
+N_BLOCK, S_BLOCK = kernel_blocks("edge_reduce")
 
 
 def _moment_rows(values: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:

@@ -21,8 +21,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-N_BLOCK = 1024
-S_BLOCK = 512
+# Sourced from the shared tiling table (kernels/tiling.py); re-exported
+# so existing imports of these constants keep working.
+from ..tiling import kernel_blocks
+
+N_BLOCK, S_BLOCK = kernel_blocks("sample_mask")
 
 
 def _select_kernel(sidx_ref, u_ref, frac_ref, mask_ref, w_ref, acc_ref, *, s_steps: int):

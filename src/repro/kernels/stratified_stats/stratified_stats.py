@@ -22,8 +22,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-N_BLOCK = 512
-S_BLOCK = 512
+# Sourced from the shared tiling table (kernels/tiling.py); re-exported
+# so existing imports of these constants keep working.
+from ..tiling import kernel_blocks
+
+N_BLOCK, S_BLOCK = kernel_blocks("stratified_stats")
 
 
 def _stats_kernel(sidx_ref, val_ref, mask_ref, out_ref):

@@ -1,12 +1,18 @@
 """Backend parity: the fused multi-column edge-reduce backend ("pallas")
-against the per-column segment-ops oracle ("segment") for every registry
-accumulator, across modes, grouping, and the legacy shim.
+and the single-traversal megakernel backend ("fused") against the
+per-column segment-ops oracle ("segment") for every registry accumulator,
+across modes, grouping, sampling methods, and the legacy shim.
 
 Off-TPU the pallas backend lowers to the fused single-pass stacked segment
 reduce (same raw power sums as the MXU kernel); its moments are centered
 once cloud-side (``m2 = Σy² − nȳ²``) instead of the segment backend's
 two-pass centering, so moment-derived estimates agree to documented fp32
-tolerance while count / extrema / sketch states agree exactly."""
+tolerance while count / extrema / sketch states agree exactly.  The fused
+backend additionally reproduces the *sampling decisions* in-kernel (the
+unified threshold compare); its Bernoulli path runs in latlon mode where
+overflow-stratum stat rows deliberately stay zero (counts reconstructed as
+residuals, estimation zeroes overflow regardless), so state-level
+comparisons for that path go through ``zero_overflow_accs``."""
 
 import numpy as np
 import pytest
@@ -55,30 +61,41 @@ def window():
     return next(windows.count_windows(stream, 25_000))
 
 
-def _run(table, window, backend, mode="preagg", group_by=None, fraction=0.6):
-    cfg = PipelineConfig(backend=backend, raw_capacity=25_000)
+def _run(table, window, backend, mode="preagg", group_by=None, fraction=0.6,
+         method="srs", staging_dtype="float32"):
+    cfg = PipelineConfig(
+        backend=backend, raw_capacity=25_000, staging_dtype=staging_dtype
+    )
     pipe = EdgeCloudPipeline(table, cfg)
-    q = Query(aggs=PARITY_AGGS, mode=mode, group_by=group_by)
+    q = Query(aggs=PARITY_AGGS, mode=mode, group_by=group_by, method=method)
     return pipe.execute(q, jax.random.key(17), window, fraction=fraction)
 
 
-@pytest.mark.parametrize("mode", ["preagg", "raw"])
-@pytest.mark.parametrize("group_by", [None, "neighborhood"])
-def test_backend_parity_all_accumulators(table, window, mode, group_by):
-    """Same key, same sampling decisions: every aggregate of every registry
-    accumulator agrees across backends within the documented tolerance."""
-    seg = _run(table, window, "segment", mode=mode, group_by=group_by)
-    pal = _run(table, window, "pallas", mode=mode, group_by=group_by)
-    assert int(seg.n_sampled) == int(pal.n_sampled)
-    assert int(seg.n_valid) == int(pal.n_valid)
+def _assert_estimate_parity(seg, other, label, rtol=RTOL, atol=ATOL):
+    assert int(seg.n_sampled) == int(other.n_sampled), label
+    assert int(seg.n_valid) == int(other.n_valid), label
+    assert int(seg.n_overflow) == int(other.n_overflow), label
     for spec in PARITY_AGGS:
         for field in ("value", "moe", "n", "population"):
             a = np.asarray(getattr(seg.estimates[spec.key], field))
-            b = np.asarray(getattr(pal.estimates[spec.key], field))
+            b = np.asarray(getattr(other.estimates[spec.key], field))
             np.testing.assert_allclose(
-                a, b, rtol=RTOL, atol=ATOL, err_msg=f"{spec.key}.{field} [{mode}/{group_by}]"
+                a, b, rtol=rtol, atol=atol, err_msg=f"{spec.key}.{field} [{label}]"
             )
-    # non-moment states never pass through the kernel: bit-identical
+
+
+@pytest.mark.parametrize("backend", ["pallas", "fused"])
+@pytest.mark.parametrize("mode", ["preagg", "raw"])
+@pytest.mark.parametrize("group_by", [None, "neighborhood"])
+def test_backend_parity_all_accumulators(table, window, backend, mode, group_by):
+    """Same key, same sampling decisions: every aggregate of every registry
+    accumulator agrees across backends within the documented tolerance."""
+    seg = _run(table, window, "segment", mode=mode, group_by=group_by)
+    pal = _run(table, window, backend, mode=mode, group_by=group_by)
+    _assert_estimate_parity(seg, pal, f"{backend}/{mode}/{group_by}")
+    # SRS runs the megakernel in sidx mode (every slot exact) and the
+    # pallas backend never routes these kinds through a kernel at all:
+    # sketch/extrema states are bit-identical on both backends
     for col in ("value", "occupancy"):
         np.testing.assert_array_equal(
             np.asarray(seg.stats[col]["sketch"].bins),
@@ -121,3 +138,143 @@ def test_backend_legacy_shim_parity(table, window):
 def test_backend_validation():
     with pytest.raises(ValueError, match="backend"):
         PipelineConfig(backend="cuda")
+    with pytest.raises(ValueError, match="staging_dtype"):
+        PipelineConfig(backend="fused", staging_dtype="float16")
+    with pytest.raises(ValueError, match="fused"):
+        PipelineConfig(backend="segment", staging_dtype="bfloat16")
+    # bf16 staging on the fused backend is the supported combination
+    PipelineConfig(backend="fused", staging_dtype="bfloat16")
+
+
+# -- megakernel ("fused") specific paths --------------------------------------
+
+
+def _zeroed(stats):
+    from repro.core import estimators
+
+    return {c: estimators.zero_overflow_accs(kinds) for c, kinds in stats.items()}
+
+
+def test_fused_bernoulli_latlon_path(table, window):
+    """Bernoulli preagg is the full single-traversal path: membership
+    resolves in-kernel from lat/lon (no sidx/mask in HBM).  Sampling
+    counters are bit-identical; states agree after overflow zeroing (the
+    latlon kernel deliberately leaves overflow stat rows zero and the
+    pipeline reconstructs overflow *counts* as residuals)."""
+    seg = _run(table, window, "segment", method="bernoulli")
+    fus = _run(table, window, "fused", method="bernoulli")
+    _assert_estimate_parity(seg, fus, "fused/bernoulli")
+    za, zb = _zeroed(seg.stats), _zeroed(fus.stats)
+    for col in ("value", "occupancy"):
+        np.testing.assert_array_equal(
+            np.asarray(za[col]["sketch"].bins), np.asarray(zb[col]["sketch"].bins)
+        )
+        np.testing.assert_allclose(
+            np.asarray(za[col]["moments"].total),
+            np.asarray(zb[col]["moments"].total),
+            rtol=1e-6, atol=1e-3,
+        )
+    np.testing.assert_array_equal(
+        np.asarray(za["value"]["extrema"].min), np.asarray(zb["value"]["extrema"].min)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(za["value"]["extrema"].max), np.asarray(zb["value"]["extrema"].max)
+    )
+
+
+@pytest.mark.parametrize("method", ["srs", "bernoulli"])
+def test_fused_nonmultiple_n_and_overflow(table, method):
+    """Non-block-multiple N (kernel pads) with a heavy overflow stratum and
+    a cross-ROI member mask: fused == segment on every counter/estimate."""
+    rng = np.random.default_rng(11)
+    n = 777  # not a multiple of any block size
+    lat_lo, lat_hi = SHENZHEN_BBOX[0]
+    lon_lo, lon_hi = SHENZHEN_BBOX[1]
+    win = {
+        # ~40% of tuples outside the bbox -> overflow stratum
+        "lat": rng.uniform(lat_lo - 0.3, lat_hi + 0.3, n).astype(np.float32),
+        "lon": rng.uniform(lon_lo - 0.3, lon_hi + 0.3, n).astype(np.float32),
+        "valid": rng.uniform(size=n) < 0.85,
+        "value": rng.normal(5.0, 2.0, n).astype(np.float32),
+        "occupancy": rng.uniform(0, 4, n).astype(np.float32),
+    }
+    # an ROI that is a strict sub-box: ok = valid & roi exercises the
+    # cross-ROI member masking inside the kernel's ok lane
+    roi = ((lat_lo, (lat_lo + lat_hi) / 2), (lon_lo, lon_hi))
+    for use_roi in (None, roi):
+        q = Query(aggs=PARITY_AGGS, method=method, roi=use_roi)
+        outs = {}
+        for backend in ("segment", "fused"):
+            pipe = EdgeCloudPipeline(table, PipelineConfig(backend=backend))
+            outs[backend] = pipe.execute(q, jax.random.key(23), win, fraction=0.5)
+        _assert_estimate_parity(
+            outs["segment"], outs["fused"], f"{method}/roi={use_roi is not None}"
+        )
+
+
+@pytest.mark.parametrize("method", ["srs", "bernoulli"])
+def test_fused_all_masked_pane(table, method):
+    """A pane with zero valid tuples: the fused path agrees on the empty
+    counters and keeps every stat row at its identity."""
+    n = 513
+    win = {
+        "lat": np.full(n, 22.6, np.float32),
+        "lon": np.full(n, 114.0, np.float32),
+        "valid": np.zeros(n, bool),
+        "value": np.ones(n, np.float32),
+        "occupancy": np.ones(n, np.float32),
+    }
+    q = Query(aggs=PARITY_AGGS, method=method)
+    outs = {}
+    for backend in ("segment", "fused"):
+        pipe = EdgeCloudPipeline(table, PipelineConfig(backend=backend))
+        outs[backend] = pipe.execute(q, jax.random.key(3), win, fraction=0.5)
+    seg, fus = outs["segment"], outs["fused"]
+    assert int(fus.n_sampled) == int(seg.n_sampled) == 0
+    assert int(fus.n_valid) == int(seg.n_valid) == 0
+    assert int(fus.n_overflow) == int(seg.n_overflow) == 0
+    np.testing.assert_array_equal(
+        np.asarray(seg.stats["value"]["moments"].n),
+        np.asarray(fus.stats["value"]["moments"].n),
+    )
+    assert float(np.asarray(fus.stats["value"]["moments"].total).sum()) == 0.0
+
+
+@pytest.mark.parametrize("method", ["srs", "bernoulli"])
+def test_fused_refined_member_fractions(table, window, method):
+    """The refined fused pass (per-member (M,) fractions from one shared
+    draw) through a StreamSession: fused == segment per member, per pane."""
+    from repro.core.session import StreamSession
+
+    q1 = Query(aggs=(AggSpec("mean", "value"), AggSpec("min", "value")), method=method)
+    q2 = Query(aggs=(AggSpec("sum", "occupancy"), AggSpec("p50", "occupancy")), method=method)
+    outs = {}
+    for backend in ("segment", "fused"):
+        sess = StreamSession(EdgeCloudPipeline(table, PipelineConfig(backend=backend)))
+        r1 = sess.register(q1, initial_fraction=0.7)
+        r2 = sess.register(q2, initial_fraction=0.3)  # divergent -> refined pass
+        step = sess.step(jax.random.key(29), window)
+        outs[backend] = (step, r1.qid, r2.qid)
+    (s0, qa, qb), (s1, _, _) = outs["segment"], outs["fused"]
+    for qid in (qa, qb):
+        a, b = s0.results[qid], s1.results[qid]
+        assert int(a.n_sampled) == int(b.n_sampled), qid
+        for k in a.estimates:
+            np.testing.assert_allclose(
+                np.asarray(a.estimates[k].value), np.asarray(b.estimates[k].value),
+                rtol=RTOL, atol=ATOL, err_msg=f"refined/{method}/{qid}/{k}",
+            )
+
+
+def test_fused_bf16_staging(table, window):
+    """bf16 staging only rounds the kernel's value inputs (accumulators
+    stay f32): estimates track the f32-staged fused run to bf16 tolerance
+    and the sampling decisions are identical (sampling lanes stay f32)."""
+    f32 = _run(table, window, "fused", method="bernoulli")
+    b16 = _run(table, window, "fused", method="bernoulli", staging_dtype="bfloat16")
+    assert int(f32.n_sampled) == int(b16.n_sampled)
+    assert int(f32.n_overflow) == int(b16.n_overflow)
+    for spec in PARITY_AGGS:
+        a = np.asarray(f32.estimates[spec.key].value)
+        b = np.asarray(b16.estimates[spec.key].value)
+        np.testing.assert_allclose(a, b, rtol=2e-2, atol=0.1, err_msg=spec.key)

@@ -270,6 +270,77 @@ def test_edg004_fires_on_non_f32_accumulation_dtype(tmp_path):
     )
 
 
+# Megakernel-shaped triad: many keyword-only mode/layout params with
+# defaults (sidx / lat / lon / codes / ext_idx / sk_idx) around a short
+# required prefix — the shape PR 8's fused kernel actually ships.
+MEGA_OPS = """
+def edge_mega(vals, ok, scores, thresholds, num_slots, *,
+              sidx=None, lat=None, lon=None, codes=None, precision=None,
+              ext_idx=(), sk_idx=(), interpret=None):
+    return vals
+"""
+
+MEGA_REF_OK = """
+import numpy as np
+
+def edge_mega_ref(vals, ok, scores, thresholds, num_slots, *,
+                  sidx=None, lat=None, lon=None, codes=None, precision=None,
+                  ext_idx=(), sk_idx=()):
+    return np.asarray(vals)
+"""
+
+MEGA_REF_DRIFTED = """
+import numpy as np
+
+def edge_mega_ref(vals, ok, thresholds, num_slots):
+    return np.asarray(vals)
+"""
+
+
+def test_edg004_megakernel_shaped_bad_triad(tmp_path):
+    """Drifted required prefix fires; a bf16 *accumulator* literal in the
+    kernel body fires (staging is the caller's dtype choice, accumulation
+    must stay f32)."""
+    res = lint_tree(
+        tmp_path,
+        {
+            "src/repro/kernels/mega/__init__.py": "",
+            "src/repro/kernels/mega/ops.py": MEGA_OPS,
+            "src/repro/kernels/mega/ref.py": MEGA_REF_DRIFTED,
+            "src/repro/kernels/mega/mega.py": (
+                "import jax.numpy as jnp\n"
+                "def k(rows, member):\n"
+                "    acc = jnp.zeros((8, 8), jnp.bfloat16)\n"
+                "    return acc + rows @ member\n"
+            ),
+        },
+    )
+    found = [f for f in res.findings if f.code == "EDG004"]
+    assert any("required params" in f.message for f in found)
+    assert any("bfloat16" in f.message for f in found)
+
+
+def test_edg004_edg006_clean_on_megakernel_shaped_triad(tmp_path):
+    """The clean twin: keyword-only optional mode params do not count as
+    drift, and a numpy oracle with its own encoder helpers is EDG006-pure."""
+    res = lint_tree(
+        tmp_path,
+        {
+            "src/repro/kernels/mega/__init__.py": "",
+            "src/repro/kernels/mega/ops.py": MEGA_OPS,
+            "src/repro/kernels/mega/ref.py": MEGA_REF_OK,
+            "src/repro/kernels/mega/mega.py": (
+                "import jax.numpy as jnp\n"
+                "def k(rows, member):\n"
+                "    # staging cast: inputs may arrive reduced, math is f32\n"
+                "    return rows.astype(jnp.float32) @ member\n"
+            ),
+        },
+    )
+    assert "EDG004" not in codes(res)
+    assert "EDG006" not in codes(res)
+
+
 def test_edg004_clean_on_matching_triad(tmp_path):
     res = lint_tree(
         tmp_path,
@@ -400,6 +471,15 @@ def test_edg006_clean_on_numpy_ref_and_non_ref_jax(tmp_path):
 # ---------------------------------------------------------------------------
 # The production contract: the real tree is clean, suppressions bounded
 # ---------------------------------------------------------------------------
+
+
+def test_megakernel_triad_lints_clean_unsuppressed():
+    """PR 8 acceptance: the fused megakernel triad passes edgelint with no
+    findings AND no suppression comments anywhere in its directory."""
+    res = lint_paths(["src/repro/kernels/edge_megakernel"], root=REPO_ROOT)
+    assert res.errors == []
+    assert res.findings == [], "\n".join(f.render() for f in res.findings)
+    assert res.suppressed == [], [s.render() for s in res.suppressed]
 
 
 def test_real_tree_is_clean_with_bounded_suppressions():

@@ -9,6 +9,22 @@ import numpy as np
 import jax
 
 
+# CI-gated metrics re-measure this many times and gate on the median (see
+# median_of_k); single-shot walls on shared runners are too noisy to gate
+REPEATS = 3
+
+
+def median_of_k(measure, k: int = REPEATS) -> float:
+    """Median of ``k`` independent runs of ``measure()`` (a zero-arg callable
+    returning one scalar metric, e.g. a paired speedup ratio).
+
+    Re-measuring the *whole* metric — both arms of a ratio inside one
+    ``measure`` call — keeps paired comparisons paired, so a noisy-neighbor
+    burst on a CI runner skews one repeat, not the gate.
+    """
+    return float(np.median([measure() for _ in range(k)]))
+
+
 def time_call(fn, *args, warmup: int = 2, iters: int = 5) -> float:
     """Median wall time of fn(*args) in microseconds (blocking)."""
     for _ in range(warmup):

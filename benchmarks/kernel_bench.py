@@ -27,7 +27,7 @@ from repro.kernels.sample_mask.ref import sample_mask_ref
 from repro.kernels.stratified_stats import stratified_stats
 from repro.kernels.stratified_stats.ref import stratified_stats_ref
 
-from .common import csv_line, time_call
+from .common import REPEATS, csv_line, median_of_k, time_call
 
 
 def run():
@@ -188,8 +188,20 @@ def megakernel_metrics(n: int = 20_000, precision: int = 5, c: int = 4) -> dict:
             ext_idx=ext_idx, sk_idx=sk_idx,
         )
 
-    chain_us = time_call(chain, lat, lon, u, ok, cols)
-    mega_us = time_call(mega, lat, lon, u, ok, cols)
+    # gated speedup: median of REPEATS paired (chain, mega) re-measurements
+    chain_walls: list[float] = []
+    mega_walls: list[float] = []
+
+    def paired_speedup() -> float:
+        cw = time_call(chain, lat, lon, u, ok, cols)
+        mw = time_call(mega, lat, lon, u, ok, cols)
+        chain_walls.append(cw)
+        mega_walls.append(mw)
+        return cw / max(mw, 1e-9)
+
+    speedup = median_of_k(paired_speedup, REPEATS)
+    chain_us = float(np.median(chain_walls))
+    mega_us = float(np.median(mega_walls))
     mega_bf16_us = time_call(mega, lat, lon, u, ok, cols.astype(jnp.bfloat16))
 
     # parity over real strata (the chain's overflow slot collects tuples
@@ -215,7 +227,7 @@ def megakernel_metrics(n: int = 20_000, precision: int = 5, c: int = 4) -> dict:
         "megakernel_us": mega_us,
         "megakernel_bf16_us": mega_bf16_us,
         "megakernel_chain_us": chain_us,
-        "megakernel_speedup": chain_us / max(mega_us, 1e-9),
+        "megakernel_speedup": speedup,
         "megakernel_chain_bytes_per_tuple": chain_b,
         "megakernel_fused_bytes_per_tuple": fused_b,
         "megakernel_traversal_ratio": chain_b / fused_b,
@@ -231,18 +243,30 @@ def small_metrics(n: int = 20_000, strata: int = 500) -> dict:
     rng = np.random.default_rng(0)
     sidx = jnp.asarray(rng.integers(0, strata, n), jnp.int32)
     mask = jnp.asarray(rng.random(n) < 0.8)
-    out: dict = {"config": {"n": n, "strata": strata, "backend": jax.default_backend()}}
+    out: dict = {
+        "config": {"n": n, "strata": strata, "backend": jax.default_backend()},
+        "repeats": REPEATS,
+    }
     for c in (4, 8):
         cols = jnp.asarray(rng.normal(10, 3, (c, n)), jnp.float32)
         fused = jax.jit(lambda s, v, m: edge_reduce(s, v, m, strata))
         percol = jax.jit(lambda s, v, m: edge_reduce_percol(s, v, m, strata))
-        fused_us = time_call(fused, sidx, cols, mask)
-        percol_us = time_call(percol, sidx, cols, mask)
+        fused_walls: list[float] = []
+        percol_walls: list[float] = []
+
+        def paired_speedup() -> float:
+            f = time_call(fused, sidx, cols, mask)
+            p = time_call(percol, sidx, cols, mask)
+            fused_walls.append(f)
+            percol_walls.append(p)
+            return p / max(f, 1e-9)
+
+        speedup = median_of_k(paired_speedup, REPEATS)
         g = edge_reduce(sidx, cols, mask, strata)
         r = edge_reduce_ref(sidx, cols, mask, strata)
-        out[f"edge_reduce_fused_c{c}_us"] = fused_us
-        out[f"edge_reduce_percol_c{c}_us"] = percol_us
-        out[f"edge_reduce_fused_speedup_c{c}"] = percol_us / max(fused_us, 1e-9)
+        out[f"edge_reduce_fused_c{c}_us"] = float(np.median(fused_walls))
+        out[f"edge_reduce_percol_c{c}_us"] = float(np.median(percol_walls))
+        out[f"edge_reduce_fused_speedup_c{c}"] = speedup
         out[f"edge_reduce_parity_c{c}"] = all(
             bool(jnp.allclose(a, b, rtol=1e-5, atol=1e-2)) for a, b in zip(g, r)
         )

@@ -63,6 +63,13 @@ def check(measured_paths, baseline_path, tolerance=None):
             continue
         with open(path) as f:
             measured = json.load(f)
+        repeats = measured.get("repeats")
+        if repeats is not None:
+            # benches record their repeat count next to the metrics (the
+            # gated values are medians of that many re-measurements), so
+            # the uploaded artifacts and trend history stay comparable
+            # across noise-hardening changes
+            report.append(f"{name}: gated metrics are medians of {repeats} repeats")
         for key, base in gates.items():
             got = measured.get(key)
             if got is None:

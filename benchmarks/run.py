@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV lines.
   Fig 20-21  -> edge_vs_cloud (SpatialSSJP baseline implemented)
   kernels    -> kernel_bench
   query API  -> query_bench (grouped 3-aggregate query vs legacy path)
+  serving    -> multitenant_bench (Q-tenant batched finalize + churn)
   §Roofline  -> roofline (reads experiments/dryrun artifacts)
 """
 
@@ -27,6 +28,7 @@ def main() -> None:
         edgesos_latency,
         ingest_throughput,
         kernel_bench,
+        multitenant_bench,
         query_bench,
         roofline,
     )
@@ -39,6 +41,7 @@ def main() -> None:
         ("edge_vs_cloud", edge_vs_cloud),
         ("kernel_bench", kernel_bench),
         ("query_bench", query_bench),
+        ("multitenant_bench", multitenant_bench),
         ("roofline", roofline),
     ]
     args = sys.argv[1:]

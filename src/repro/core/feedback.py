@@ -132,6 +132,47 @@ def init_vector_state(fractions) -> ControllerState:
     )
 
 
+def stack_states(entries) -> ControllerState:
+    """Stack per-registration ``(fraction, re_ema, steps)`` host mirrors
+    into one ``(Q,)`` :class:`ControllerState`.
+
+    This is the serving-scale form of :func:`init_vector_state`: a
+    ``StreamSession`` keeps float mirrors on each registration (external
+    policies — event-driven sampling, checkpoint restore — write them
+    directly) and stacks the whole tenant population into arrays right
+    before the single :func:`update_vector` call per pane, so a thousand
+    controllers cost three ``asarray`` builds and ~15 device ops total
+    instead of O(Q) per-query dispatches.
+    """
+    entries = list(entries)
+    return ControllerState(
+        fraction=jnp.asarray([e[0] for e in entries], jnp.float32),
+        re_ema=jnp.asarray([e[1] for e in entries], jnp.float32),
+        steps=jnp.asarray([e[2] for e in entries], jnp.int32),
+    )
+
+
+def scatter_observations(num: int, segments) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Dense ``(Q,)`` ``(re_obs, window_size)`` vectors from sparse per-batch
+    observation segments.
+
+    ``segments`` is an iterable of ``(rows, re_vec, n_vec)`` — integer row
+    indices plus same-length observation vectors (a batched finalize emits
+    one vector per signature batch; singleton emissions stack into one
+    extra segment).  Rows not covered by any segment hold the
+    :func:`update_vector` masked-entry conventions (``re=0``, ``n=1``), so
+    the result can feed ``update_vector`` with ``active`` marking exactly
+    the covered rows.
+    """
+    re_obs = jnp.zeros((num,), jnp.float32)
+    n_obs = jnp.ones((num,), jnp.float32)
+    for rows, re_vec, n_vec in segments:
+        idx = jnp.asarray(rows, jnp.int32)
+        re_obs = re_obs.at[idx].set(jnp.asarray(re_vec, jnp.float32))
+        n_obs = n_obs.at[idx].set(jnp.asarray(n_vec, jnp.float32))
+    return re_obs, n_obs
+
+
 def update_vector(
     state: ControllerState,
     observed_re: jnp.ndarray,

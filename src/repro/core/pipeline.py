@@ -685,16 +685,48 @@ class EdgeCloudPipeline:
         self._execs: dict[tuple[Query, bool], callable] = {}
         self._passes: dict[tuple[Plan, bool], callable] = {}
         self._refined_passes: dict[tuple, callable] = {}
-        # jitted session emit paths, keyed (query, num_panes): sessions
-        # share these like _passes, so a fresh session over a warmed
-        # pipeline pays no first-pane compile
+        # jitted session emit paths, keyed by *finalize signature* (not by
+        # query: two queries differing only in ROI/method/mode share one
+        # compiled finalize) plus pane count / batch width: sessions share
+        # these like _passes, so a fresh session over a warmed pipeline
+        # pays no first-pane compile
         self._finalizers: dict[tuple, callable] = {}
+        # compiled-program cache accounting, per cache family.  A "miss"
+        # is a new trace+compile (or a fresh lowering for "plan"); during
+        # steady-state tenant churn every family must hit — the
+        # multitenant bench gates the miss delta at zero.
+        self.cache_stats: dict[str, dict[str, int]] = {
+            f: {"hits": 0, "misses": 0}
+            for f in ("plan", "exec", "pass", "refined_pass", "finalize")
+        }
+
+    def _cache_event(self, family: str, hit: bool) -> None:
+        self.cache_stats[family]["hits" if hit else "misses"] += 1
+
+    @property
+    def compile_count(self) -> int:
+        """Total compiled-program cache misses across the jitted families
+        (``plan`` lowerings are host-side and excluded).  The steady-state
+        churn contract: this must not move while tenants register and
+        unregister structurally-seen queries."""
+        return sum(
+            v["misses"] for f, v in self.cache_stats.items() if f != "plan"
+        )
+
+    def cache_snapshot(self) -> dict:
+        """Copy of the per-family hit/miss counters plus the aggregate
+        ``compile_count`` (surfaced through ``RuntimeStats``)."""
+        return {
+            "families": {f: dict(v) for f, v in self.cache_stats.items()},
+            "compile_count": self.compile_count,
+        }
 
     # -- declarative query API ----------------------------------------------
 
     def plan(self, query: Query) -> Plan:
         """Lower (and cache) a query against this pipeline's stratum table."""
         p = self._plans.get(query)
+        self._cache_event("plan", p is not None)
         if p is None:
             p = aqp.lower(query, self.table)
             self._plans[query] = p
@@ -719,6 +751,7 @@ class EdgeCloudPipeline:
 
     def _query_fn(self, query: Query, sharded: bool):
         fn = self._execs.get((query, sharded))
+        self._cache_event("exec", fn is not None)
         if fn is not None:
             return fn
         plan = self.plan(query)
@@ -755,6 +788,7 @@ class EdgeCloudPipeline:
         program.
         """
         fn = self._passes.get((plan, sharded))
+        self._cache_event("pass", fn is not None)
         if fn is not None:
             return fn
         table, cfg = self.table, self.config
@@ -778,6 +812,7 @@ class EdgeCloudPipeline:
         """
         cache_key = (fused.members, sharded)
         fn = self._refined_passes.get(cache_key)
+        self._cache_event("refined_pass", fn is not None)
         if fn is not None:
             return fn
         table, cfg = self.table, self.config
@@ -790,6 +825,68 @@ class EdgeCloudPipeline:
         template = (tuple((_stats_template(p), 0, 0, 0) for p in fused.members), 0)
         fn = self._compiled(fused.shared, run, template, sharded)
         self._refined_passes[cache_key] = fn
+        return fn
+
+    def _finalize_body(self, plan: Plan, num_panes: int):
+        """``(stats, key) -> (estimates, merged)`` for one query's window:
+        merge ``num_panes`` stacked pane accumulators (pass-through when the
+        window is one pane, preserving bit-compatibility with ``execute``)
+        and finalize."""
+        table = self.table
+
+        if num_panes == 1:
+
+            def run(stats, bkey):
+                return aqp.finalize(plan, table, stats, key=bkey), stats
+
+        else:
+
+            def run(stacked, bkey):
+                merged = {
+                    c: estimators.merge_accs_panes(stacked[c]) for c in plan.columns
+                }
+                return aqp.finalize(plan, table, merged, key=bkey), merged
+
+        return run
+
+    def finalize_fn(self, plan: Plan, num_panes: int):
+        """Jitted cloud-side emit for one registration, cached by *finalize
+        signature*: queries that differ only in sampling method / mode /
+        ROI share one compiled program (finalize never reads those — see
+        :func:`~.query.finalize_signature`)."""
+        key = ("single", aqp.finalize_signature(plan), num_panes)
+        fn = self._finalizers.get(key)
+        self._cache_event("finalize", fn is not None)
+        if fn is not None:
+            return fn
+        fn = jax.jit(self._finalize_body(plan, num_panes))
+        self._finalizers[key] = fn
+        return fn
+
+    def batched_finalize_fn(self, plan: Plan, num_panes: int, batch: int):
+        """Jitted *vmapped* finalize: one dispatch emits ``batch`` queries
+        sharing a finalize signature (key broadcast — each row computes
+        exactly what its singleton finalize would, so batching preserves
+        bit-parity).  Takes the *list* of ``batch`` member window-stats
+        pytrees; the leading-axis stack happens inside the compiled
+        program — stacking op-by-op on the host costs one dispatch per
+        leaf per batch, which is exactly the per-query overhead batching
+        exists to amortize.  ``batch`` is the padded width (sessions pad
+        to the next power of two so tenant churn steps through O(log Q)
+        compiled widths, not one per group size)."""
+        key = ("batched", aqp.finalize_signature(plan), num_panes, batch)
+        fn = self._finalizers.get(key)
+        self._cache_event("finalize", fn is not None)
+        if fn is not None:
+            return fn
+        body = jax.vmap(self._finalize_body(plan, num_panes), in_axes=(0, None))
+
+        def run(member_stats, bkey):
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *member_stats)
+            return body(stacked, bkey)
+
+        fn = jax.jit(run)
+        self._finalizers[key] = fn
         return fn
 
     def _window_arrays(self, window, plan: Plan):

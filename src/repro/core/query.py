@@ -304,6 +304,33 @@ def fusion_key(plan: Plan) -> tuple:
     return (q.method, q.mode, q.roi)
 
 
+def finalize_signature(plan: Plan) -> tuple:
+    """Hashable *finalize* signature of a plan: exactly the inputs
+    :func:`finalize` reads.
+
+    ``finalize`` consumes the aggregate specs, grouping, confidence,
+    bootstrap configuration, and the plan's column/kind layout — never the
+    sampling method, transmission mode, or ROI (those only shape which
+    *stats* arrive).  Two plans with equal finalize signatures therefore
+    run the *same* cloud-side consolidation program over same-shaped
+    accumulator pytrees, which is what lets a :class:`~.session.StreamSession`
+    vmap one jitted finalize across every due query sharing a signature —
+    one compiled program per signature, not per registered query — even
+    when the members live in different fusion groups (e.g. same aggregates
+    over disjoint ROIs).
+    """
+    q = plan.query
+    return (
+        q.aggs,
+        q.group_by,
+        q.confidence,
+        q.bootstrap_replicates,
+        plan.columns,
+        plan.column_kinds,
+        plan.num_groups,
+    )
+
+
 @dataclasses.dataclass(frozen=True)
 class FusedPlan:
     """A set of lowered queries served by one shared edge pass.

@@ -211,6 +211,10 @@ class RuntimeStats:
     dispatch: dict
     pane_latency: dict
     histograms: dict
+    # pipeline compiled-program cache counters (per jit family hit/miss plus
+    # the aggregate compile_count) — the multi-tenant churn contract's
+    # observability surface; empty when the session exposes no pipeline
+    compile_cache: dict = dataclasses.field(default_factory=dict)
 
     @property
     def dropped_tuples(self) -> int:
@@ -595,4 +599,10 @@ class StreamRuntime:
             dispatch=_percentiles(series["dispatch"]),
             pane_latency=_percentiles(series["pane_latency"]),
             histograms={k: _histogram_ms(v) for k, v in series.items()},
+            compile_cache=(
+                pipe.cache_snapshot()
+                if (pipe := getattr(self.session, "pipe", None)) is not None
+                and hasattr(pipe, "cache_snapshot")
+                else {}
+            ),
         )

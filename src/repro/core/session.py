@@ -10,13 +10,26 @@ approximate analytics wins by sharing one sampling pass):
   * ``register(query, slo=..., window=...)`` any number of declarative
     :class:`~.query.Query` specs, each with an optional pane-based
     :class:`~.windows.WindowSpec` (tumbling / sliding / hopping).
-  * Each ``step(key, pane)`` partitions the registered set into *fusion
-    groups* — queries whose plans share a sampling signature
+  * Registrations are partitioned **incrementally** into *fusion groups* —
+    queries whose plans share a sampling signature
     (:func:`~.query.fusion_key`: method, mode, ROI) and therefore draw
-    identical sampling decisions — fuses each group
-    (:func:`~.query.fuse`), and runs **one** stratify+EdgeSOS pass and one
-    collective per group.  Per-query ``finalize`` then carves each query's
-    estimates out of the shared merged ``ColumnStats``.
+    identical sampling decisions.  ``register`` inserts into (or creates)
+    exactly one group; ``unregister`` removes from (or dissolves) one —
+    the rest of the partition, its fused plans, and its compiled edge
+    programs are untouched, so a register/unregister storm over thousands
+    of tenants never replans the world.  Every admission decision lands in
+    ``plan_log`` (a :class:`PlanDecision` audit trail).
+  * Each ``step(key, pane)`` runs **one** stratify+EdgeSOS pass and one
+    collective per fusion group (:func:`~.query.fuse`).  Due windows then
+    emit through a **batched finalize**: queries sharing a *finalize
+    signature* (:func:`~.query.finalize_signature` — aggregates, grouping,
+    confidence, column layout; ROI/method/mode drop out) are stacked on a
+    leading axis and carved out of the shared merged ``ColumnStats`` by one
+    jitted ``vmap`` dispatch per signature — one compiled program per
+    signature, not per query, with bit-parity to the per-query path.
+    ``step.results`` materializes per-query views lazily on access, so a
+    pane serving thousands of registered dashboards pays O(signatures)
+    dispatches, and only the results actually read pay slicing.
   * Sliding/hopping windows fall out of the mergeable-accumulator design:
     the edge reduces each *pane* (stride-sized sub-window) to per-stratum
     registry pytrees (``{column: {kind: state}}`` — moments, extrema,
@@ -24,8 +37,12 @@ approximate analytics wins by sharing one sampling pass):
     ring of panes per query and merges them cloud-side
     (:func:`~.estimators.merge_accs_panes`, one vectorized pass per kind)
     into each window's answer without re-touching raw tuples.
-  * Per-query QoS runs through a vectorized feedback controller state (one
-    fraction per registered query, :func:`~.feedback.update_vector`).
+  * Per-query QoS runs through a vectorized feedback controller: the whole
+    tenant population's ``(fraction, re_ema, steps)`` mirrors stack into
+    ``(Q,)`` arrays (:func:`~.feedback.stack_states`), batched relative
+    errors scatter in per signature batch
+    (:func:`~.feedback.scatter_observations`), and one
+    :func:`~.feedback.update_vector` call advances every controller.
   * **Per-query fraction refinement**: when a preagg fusion group's member
     fractions diverge (or a Bernoulli group's ROIs differ), the group runs
     the *refined* edge program (:func:`~.pipeline._fused_edge_program`):
@@ -39,16 +56,29 @@ approximate analytics wins by sharing one sampling pass):
     pane ring, controller slice, and the session drop/uplink counters to a
     versioned pytree (:mod:`.checkpoint`); ``restore()`` into a freshly
     registered session resumes mid-window bit-identically.
+  * ``emit_all(key)`` is the pull-based serving read: finalize every
+    registration's *current* window on demand (batched, no pane advance) —
+    the path a fleet of polling dashboards hits between panes.
+
+Compiled-program caches live on the :class:`~.pipeline.EdgeCloudPipeline`
+(passes keyed by plan value, finalizes keyed by finalize signature), so
+churning tenants that re-register structurally-seen queries recompile
+nothing; the pipeline's ``cache_stats`` counters make that a testable,
+benchmark-gated contract.
 
 Correctness contract (property-tested): with every query at the same
 fraction, a session step's estimates are elementwise-identical (same PRNG
 key) to running each query through ``pipeline.execute`` independently, in
 both ``preagg`` and ``raw`` modes — fusion changes the *cost*, never the
-answer.  With divergent per-query fractions, refined preagg members are
-*still* elementwise-identical to independent ``execute`` at their own
-fraction (the nested subsample IS the sample their independent draw would
-produce); raw-mode groups keep the group-max behavior, so their per-query
-error is never worse than requested.
+answer; batching finalize across a signature changes the *dispatch count*,
+never the answer.  With divergent per-query fractions, refined preagg
+members are *still* elementwise-identical to independent ``execute`` at
+their own fraction (the nested subsample IS the sample their independent
+draw would produce); raw-mode groups keep the group-max behavior, so their
+per-query error is never worse than requested.  And the incremental
+planner is equivalent to full replanning: after any register/unregister
+sequence the group partition, fused plans, and subsequent estimates match
+a fresh session registering the survivors in order.
 
 ``EdgeCloudPipeline.run_stream`` is a thin shim over a single-query session.
 """
@@ -62,10 +92,18 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from . import estimators, feedback
+from . import feedback
 from . import query as aqp
 from .feedback import SLO, ControllerState
-from .query import FusedPlan, Plan, Query, QueryResult, fuse, fusion_key
+from .query import (
+    FusedPlan,
+    Plan,
+    Query,
+    QueryResult,
+    finalize_signature,
+    fuse,
+    fusion_key,
+)
 from .windows import WindowSpec
 
 
@@ -124,11 +162,133 @@ class Registration:
         return int(self.downstream_tuples) * aqp.downstream_tuple_bytes(self.plan)
 
 
+class PlanDecision(NamedTuple):
+    """One entry of the session's admission/planning audit trail.
+
+    ``outcome`` is what the incremental planner did to the partition:
+    ``new-group`` (first member of a fresh fusion signature), ``joined``
+    (inserted into an existing group), ``left`` (removed, group survives),
+    or ``dissolved`` (last member removed, group deleted).  ``group_size``
+    is the member count *after* the decision.
+    """
+
+    seq: int
+    action: str  # "register" | "unregister"
+    qid: int
+    group_key: tuple  # fusion_key of the affected group
+    outcome: str  # "new-group" | "joined" | "left" | "dissolved"
+    group_size: int
+
+
+class _FusionGroup:
+    """One fusion-signature partition cell, maintained incrementally.
+
+    Owns its member list (registration order), the lazily re-fused carrier
+    plan, and memoized references to the pipeline's compiled edge programs
+    — so the per-pane hot loop never re-hashes O(members) plan tuples to
+    look them up, and a membership change invalidates exactly this group.
+    """
+
+    __slots__ = ("key", "members", "_fused", "_pass_fn", "_refined_fn")
+
+    def __init__(self, key: tuple):
+        self.key = key
+        self.members: list[Registration] = []
+        self._fused: FusedPlan | None = None
+        self._pass_fn = None
+        self._refined_fn = None
+
+    def invalidate(self) -> None:
+        self._fused = None
+        self._pass_fn = None
+        self._refined_fn = None
+
+    def fused_plan(self) -> FusedPlan:
+        if self._fused is None:
+            self._fused = fuse([r.plan for r in self.members])
+        return self._fused
+
+
+class _EmitBatch(NamedTuple):
+    """One batched finalize dispatch: ``regs`` queries sharing a finalize
+    signature and pane count, their stacked estimates/stats (leading axis
+    ``>= len(regs)``, padded rows repeat row 0), and per-member window
+    counters ``(n_sampled, n_valid, n_overflow, n_truncated, comm_bytes,
+    n_dropped)``."""
+
+    regs: tuple
+    estimates: dict  # agg key -> AggEstimate with batch-leading leaves
+    stats: dict  # column -> {kind: state} with batch-leading leaves
+    counters: tuple
+
+
+_PENDING = object()
+
+
+def _carve_result(batch: _EmitBatch, i: int) -> QueryResult:
+    """Materialize member ``i``'s :class:`QueryResult` view of a batch."""
+    estimates = {
+        k: aqp.AggEstimate(*(x[i] for x in est))
+        for k, est in batch.estimates.items()
+    }
+    stats = jax.tree.map(lambda x: x[i], batch.stats)
+    n_s, n_v, n_o, n_t, comm, dropped = batch.counters[i]
+    return QueryResult(
+        estimates=estimates,
+        stats=stats,
+        n_sampled=n_s,
+        n_valid=n_v,
+        n_overflow=n_o,
+        n_truncated=n_t,
+        comm_bytes=jnp.int32(comm),
+        n_dropped=dropped,
+    )
+
+
+class _LazyResults(dict):
+    """``qid -> QueryResult`` mapping over batched finalize output.
+
+    Batch members materialize (slice their rows out of the stacked
+    estimates/stats) only on access — iteration, ``values()``, ``items()``,
+    ``get`` and ``[]`` all materialize; membership/len/``keys()`` never do.
+    A pane that served thousands of registrations therefore pays per-query
+    slicing only for the results something actually reads.
+    """
+
+    def __init__(self):
+        super().__init__()
+        self._sources: dict[int, tuple[_EmitBatch, int]] = {}
+        self._batches: list[_EmitBatch] = []
+
+    def _add(self, qid: int, batch: _EmitBatch, row: int) -> None:
+        dict.__setitem__(self, qid, _PENDING)
+        self._sources[qid] = (batch, row)
+
+    def __getitem__(self, qid):
+        v = dict.__getitem__(self, qid)
+        if v is _PENDING:
+            batch, row = self._sources.pop(qid)
+            v = _carve_result(batch, row)
+            dict.__setitem__(self, qid, v)
+        return v
+
+    def get(self, qid, default=None):
+        return self[qid] if qid in self else default
+
+    def values(self):  # noqa: D102 - dict interface
+        return [self[q] for q in self]
+
+    def items(self):  # noqa: D102 - dict interface
+        return [(q, self[q]) for q in self]
+
+
 class SessionStep(NamedTuple):
     """Outcome of feeding one pane to the session.
 
     results: qid -> QueryResult for queries whose window emitted this pane
       (a query with stride s emits every s panes; others are absent).
+      Batched-finalize members materialize lazily on access
+      (:class:`_LazyResults`).
     fractions: qid -> post-update controller fraction, for every
       registration.
     comm_bytes: total edge->cloud payload of this pane's shared passes (one
@@ -164,13 +324,24 @@ class StreamSession:
                 ...  # step.results[speed.qid].estimates["mean_value"]
 
     All registered queries that share a sampling signature are served by one
-    stratify+EdgeSOS pass and one collective per pane.
+    stratify+EdgeSOS pass and one collective per pane; all due queries that
+    share a finalize signature emit through one vmapped finalize dispatch
+    (``batched_finalize=False`` falls back to the per-query emit loop —
+    the A/B ``benchmarks/multitenant_bench.py`` gates).
     """
 
-    def __init__(self, pipeline, *, sharded: bool = False, initial_fraction: float = 0.8):
+    def __init__(
+        self,
+        pipeline,
+        *,
+        sharded: bool = False,
+        initial_fraction: float = 0.8,
+        batched_finalize: bool = True,
+    ):
         self.pipe = pipeline
         self.sharded = sharded
         self.initial_fraction = float(initial_fraction)
+        self.batched_finalize = bool(batched_finalize)
         self.pane_index = 0
         self.total_comm_bytes = 0
         self.total_dropped = 0
@@ -178,14 +349,20 @@ class StreamSession:
         self.total_passes = 0  # edge passes run (one per fusion group per pane)
         self._regs: dict[int, Registration] = {}
         self._next_qid = 0
-        self._fused: dict[tuple[Query, ...], FusedPlan] = {}
+        # incremental fusion partition: fusion_key -> group, insertion order
+        self._fusion_groups: dict[tuple, _FusionGroup] = {}
+        self._reg_group: dict[int, _FusionGroup] = {}
+        self.plan_log: list[PlanDecision] = []
         # jitted emit paths cache on the *pipeline* (like _passes): plan and
         # table both derive from the pipe, so a fresh session over a warmed
         # pipe pays zero first-pane compiles — the contract
         # benchmarks/ingest_throughput.py's warm-up relies on
-        self._finalizers: dict[tuple[Query, int], callable] = pipeline._finalizers
+        self._finalizers = pipeline._finalizers
+        # controller layout (qid -> row, stacked SLOs) memo; dirtied by
+        # membership changes, rebuilt lazily at the next controller update
+        self._rows: dict[int, int] = {}
         self._slo_stack: feedback.StackedSLO | None = None
-        self._slo_sig: tuple | None = None
+        self._ctrl_dirty = True
 
     # -- registration --------------------------------------------------------
 
@@ -201,6 +378,9 @@ class StreamSession:
 
         ``slo=None`` disables QoS for this query (fixed fraction).  The
         query joins the session's fusion groups from the next ``step``.
+        Admission is incremental: only the one fusion group whose sampling
+        signature the plan carries is (lazily) re-fused; every other
+        group's fused plan and compiled programs are untouched.
         """
         window = window or WindowSpec()
         plan = self.pipe.plan(query)
@@ -232,11 +412,51 @@ class StreamSession:
         )
         self._next_qid += 1
         self._regs[reg.qid] = reg
+        gkey = fusion_key(plan)
+        grp = self._fusion_groups.get(gkey)
+        outcome = "joined" if grp is not None else "new-group"
+        if grp is None:
+            grp = _FusionGroup(gkey)
+            self._fusion_groups[gkey] = grp
+        grp.members.append(reg)
+        grp.invalidate()
+        self._reg_group[reg.qid] = grp
+        self._log_decision("register", reg.qid, gkey, outcome, len(grp.members))
+        self._ctrl_dirty = True
         return reg
 
     def unregister(self, reg: Registration) -> None:
-        """Drop a registered query (its pane ring is discarded)."""
-        self._regs.pop(reg.qid, None)
+        """Drop a registered query (its pane ring is discarded).
+
+        Removal is incremental: the member leaves its one fusion group
+        (which dissolves when emptied); no other group replans.
+        """
+        if self._regs.pop(reg.qid, None) is None:
+            return
+        grp = self._reg_group.pop(reg.qid)
+        grp.members.remove(reg)
+        grp.invalidate()
+        if not grp.members:
+            del self._fusion_groups[grp.key]
+            outcome = "dissolved"
+        else:
+            outcome = "left"
+        self._log_decision("unregister", reg.qid, grp.key, outcome, len(grp.members))
+        self._ctrl_dirty = True
+
+    def _log_decision(
+        self, action: str, qid: int, gkey: tuple, outcome: str, size: int
+    ) -> None:
+        self.plan_log.append(
+            PlanDecision(
+                seq=len(self.plan_log),
+                action=action,
+                qid=qid,
+                group_key=gkey,
+                outcome=outcome,
+                group_size=size,
+            )
+        )
 
     @property
     def registrations(self) -> tuple[Registration, ...]:
@@ -253,20 +473,10 @@ class StreamSession:
     # -- fusion machinery ----------------------------------------------------
 
     def _groups(self) -> list[list[Registration]]:
-        """Partition registrations into fusable groups (signature equality),
-        preserving registration order within and across groups."""
-        groups: dict[tuple, list[Registration]] = {}
-        for reg in self._regs.values():
-            groups.setdefault(fusion_key(reg.plan), []).append(reg)
-        return list(groups.values())
-
-    def _fused_plan(self, members: list[Registration]) -> FusedPlan:
-        sig = tuple(r.query for r in members)
-        fused = self._fused.get(sig)
-        if fused is None:
-            fused = fuse([r.plan for r in members])
-            self._fused[sig] = fused
-        return fused
+        """The fusion partition as member lists (compatibility view over the
+        incremental group structure): registration order within groups,
+        group-creation order across them."""
+        return [list(g.members) for g in self._fusion_groups.values()]
 
     def _analytic_comm(self, fused: FusedPlan, n_rows: int) -> int:
         """Per-shard uplink bytes of one shared pass, computed host-side.
@@ -287,47 +497,10 @@ class StreamSession:
             return aqp.raw_bytes(plan, cap)
         return aqp.preagg_bytes(plan, self.pipe.table.num_slots)
 
-    def _finalize_fn(self, reg: Registration, num_panes: int):
-        """Jitted cloud-side emit: merge ``num_panes`` pane accumulators
-        (vectorized pane-merge; pass-through when the window is one pane,
-        preserving bit-compatibility with ``execute``) and finalize."""
-        key = (reg.query, num_panes)
-        fn = self._finalizers.get(key)
-        if fn is not None:
-            return fn
-        plan, table = reg.plan, self.pipe.table
-
-        if num_panes == 1:
-
-            def run(stats, bkey):
-                return aqp.finalize(plan, table, stats, key=bkey), stats
-
-        else:
-
-            def run(stacked, bkey):
-                merged = {
-                    c: estimators.merge_accs_panes(stacked[c]) for c in plan.columns
-                }
-                return aqp.finalize(plan, table, merged, key=bkey), merged
-
-        fn = jax.jit(run)
-        self._finalizers[key] = fn
-        return fn
-
-    def _emit(self, reg: Registration, key) -> QueryResult:
-        """Assemble this query's window from its pane ring and finalize.
-
-        ``key`` (the step key) seeds the bootstrap error bounds: a
-        one-pane window finalizes with the same key as the shared pass, so
-        session bounds are bit-identical to an independent ``execute``."""
+    def _window_counters(self, reg: Registration) -> tuple:
+        """This query's window-level counters, summed over its pane ring
+        (device-lazy adds; host ints for the byte/drop accounting)."""
         panes = reg.ring
-        if len(panes) == 1:
-            estimates, stats = self._finalize_fn(reg, 1)(panes[0].stats, key)
-        else:
-            stacked = jax.tree.map(
-                lambda *xs: jnp.stack(xs, axis=0), *[p.stats for p in panes]
-            )
-            estimates, stats = self._finalize_fn(reg, len(panes))(stacked, key)
         n_sampled = panes[0].n_sampled
         n_valid = panes[0].n_valid
         n_overflow = panes[0].n_overflow
@@ -337,6 +510,32 @@ class StreamSession:
             n_valid = n_valid + p.n_valid
             n_overflow = n_overflow + p.n_overflow
             n_truncated = n_truncated + p.n_truncated
+        comm = sum(p.comm_bytes for p in panes)
+        dropped = sum(p.n_dropped for p in panes)
+        return (n_sampled, n_valid, n_overflow, n_truncated, comm, dropped)
+
+    def _window_stats(self, reg: Registration):
+        """The ring's stats, stacked on a leading pane axis when the window
+        spans multiple panes (pass-through for one pane, preserving
+        bit-compatibility with ``execute``)."""
+        panes = reg.ring
+        if len(panes) == 1:
+            return panes[0].stats
+        return jax.tree.map(
+            lambda *xs: jnp.stack(xs, axis=0), *[p.stats for p in panes]
+        )
+
+    def _emit(self, reg: Registration, key) -> QueryResult:
+        """Assemble this query's window from its pane ring and finalize.
+
+        ``key`` (the step key) seeds the bootstrap error bounds: a
+        one-pane window finalizes with the same key as the shared pass, so
+        session bounds are bit-identical to an independent ``execute``."""
+        fn = self.pipe.finalize_fn(reg.plan, len(reg.ring))
+        estimates, stats = fn(self._window_stats(reg), key)
+        n_sampled, n_valid, n_overflow, n_truncated, comm, dropped = (
+            self._window_counters(reg)
+        )
         return QueryResult(
             estimates=estimates,
             stats=stats,
@@ -345,11 +544,82 @@ class StreamSession:
             n_overflow=n_overflow,
             n_truncated=n_truncated,
             # uplink spent on this window's span: one shared pass per pane
-            comm_bytes=jnp.int32(sum(p.comm_bytes for p in panes)),
+            comm_bytes=jnp.int32(comm),
             # window-level drop accounting: tuples the window's panes shed
             # upstream (survives checkpoint/restore — the ring carries it)
-            n_dropped=sum(p.n_dropped for p in panes),
+            n_dropped=dropped,
         )
+
+    def _emit_batch(self, regs: list, num_panes: int, key) -> _EmitBatch:
+        """One vmapped finalize over a finalize-signature batch: member
+        window stats stacked on a leading axis *inside* the jitted program
+        (padded to the next power of two by repeating row 0, so churning
+        batch widths step through O(log Q) compiled programs), key
+        broadcast — each row computes exactly its singleton finalize."""
+        member_stats = [self._window_stats(reg) for reg in regs]
+        b = len(regs)
+        b_pad = 1 << (b - 1).bit_length()
+        member_stats = member_stats + [member_stats[0]] * (b_pad - b)
+        fn = self.pipe.batched_finalize_fn(regs[0].plan, num_panes, b_pad)
+        estimates, stats = fn(member_stats, key)
+        counters = tuple(self._window_counters(reg) for reg in regs)
+        return _EmitBatch(
+            regs=tuple(regs), estimates=estimates, stats=stats, counters=counters
+        )
+
+    def _emit_due(self, due: list, key, out: _LazyResults):
+        """Emit every due registration into ``out``.
+
+        Batches due queries by ``(finalize_signature, ring length)`` and
+        emits each multi-member batch through one vmapped dispatch;
+        singleton batches (and ``batched_finalize=False`` sessions) take
+        the per-query path.  Returns ``(singles, batches)`` for the
+        controller update: materialized ``(reg, result)`` pairs and the
+        :class:`_EmitBatch` list (whose relative-error vectors feed the
+        controller without materializing per-query views).
+        """
+        singles: list[tuple] = []
+        batch_list = out._batches  # the serving read's stacked-output view
+        if not self.batched_finalize:
+            for reg in due:
+                res = self._emit(reg, key)
+                out[reg.qid] = res
+                singles.append((reg, res))
+            return singles, batch_list
+        partition: dict[tuple, list] = {}
+        for reg in due:
+            bkey = (finalize_signature(reg.plan), len(reg.ring))
+            partition.setdefault(bkey, []).append(reg)
+        computed: dict[tuple, tuple] = {}
+        for reg in due:
+            bkey = (finalize_signature(reg.plan), len(reg.ring))
+            members = partition[bkey]
+            if len(members) == 1:
+                res = self._emit(reg, key)
+                out[reg.qid] = res
+                singles.append((reg, res))
+                continue
+            entry = computed.get(bkey)
+            if entry is None:
+                batch = self._emit_batch(members, bkey[1], key)
+                rows = {m.qid: i for i, m in enumerate(members)}
+                entry = computed[bkey] = (batch, rows)
+                batch_list.append(batch)
+            out._add(reg.qid, entry[0], entry[1][reg.qid])
+        return singles, batch_list
+
+    def emit_all(self, key) -> _LazyResults:
+        """Finalize every registration's *current* window on demand — the
+        pull-based serving read a polling consumer hits between panes.
+
+        Does not advance panes, windows, or controllers; registrations
+        with empty rings (never stepped) are absent.  Batched exactly like
+        ``step``'s due-window emit, so Q concurrent dashboards cost
+        O(finalize signatures) dispatches, not O(Q)."""
+        out = _LazyResults()
+        due = [r for r in self._regs.values() if r.ring]
+        self._emit_due(due, key, out)
+        return out
 
     # -- the continuous loop -------------------------------------------------
 
@@ -388,14 +658,20 @@ class StreamSession:
         uncaused = n_dropped - sum(drop_causes.values())
         if uncaused > 0:  # legacy producers: window-level sheds count as late
             drop_causes["late"] = drop_causes.get("late", 0) + uncaused
-        emitted: dict[int, QueryResult] = {}
+        emitted = _LazyResults()
+        due: list[Registration] = []
         comm_total = 0
-        for members in self._groups():
-            fused = self._fused_plan(members)
+        for grp in list(self._fusion_groups.values()):
+            members = grp.members
+            fused = grp.fused_plan()
             fractions = [r.fraction for r in members]
             lat, lon, cols, valid = self.pipe._window_arrays(pane, fused.shared)
             if self._refines(fused, fractions):
-                fn = self.pipe._refined_pass_fn(fused, self.sharded)
+                fn = grp._refined_fn
+                if fn is None:
+                    fn = grp._refined_fn = self.pipe._refined_pass_fn(
+                        fused, self.sharded
+                    )
                 outs, _ = fn(
                     key, lat, lon, cols, valid, jnp.asarray(fractions, jnp.float32)
                 )
@@ -403,7 +679,9 @@ class StreamSession:
                 zero = jnp.int32(0)  # refined pass is preagg-only: no buffer
                 per_member = [(st, ns, nv, no, zero) for st, ns, nv, no in outs]
             else:
-                fn = self.pipe._pass_fn(fused.shared, self.sharded)
+                fn = grp._pass_fn
+                if fn is None:
+                    fn = grp._pass_fn = self.pipe._pass_fn(fused.shared, self.sharded)
                 stats, n_sampled, n_valid, n_overflow, n_truncated, _ = fn(
                     key, lat, lon, cols, valid, jnp.float32(max(fractions))
                 )
@@ -439,8 +717,9 @@ class StreamSession:
                 reg.panes_seen += 1
                 reg.downstream_tuples = reg.downstream_tuples + n_s
                 if reg.panes_seen % reg.window.stride == 0:
-                    emitted[reg.qid] = self._emit(reg, key)
-        self._update_controllers(emitted)
+                    due.append(reg)
+        singles, batches = self._emit_due(due, key, emitted)
+        self._update_controllers(singles, batches)
         self.pane_index += 1
         self.total_comm_bytes += comm_total
         self.total_dropped += n_dropped
@@ -494,16 +773,23 @@ class StreamSession:
         from . import checkpoint as ckpt
 
         ckpt.restore(self, snapshot)
+        # controller arrays re-stack from the restored host mirrors at the
+        # next update; layout (rows / SLO stack) is membership-keyed and
+        # membership did not change, but re-deriving it is cheap and safe
+        self._ctrl_dirty = True
         return self
 
     # -- vectorized QoS ------------------------------------------------------
 
-    def _stacked_slos(self, regs: list[Registration]) -> feedback.StackedSLO:
-        sig = tuple((r.qid, r.slo) for r in regs)
-        if sig != self._slo_sig:
+    def _controller_layout(self) -> tuple[dict, feedback.StackedSLO]:
+        """Memoized (qid -> row) map + stacked SLO parameters for the
+        current registration set; rebuilt only after membership changes."""
+        if self._ctrl_dirty:
+            regs = list(self._regs.values())
+            self._rows = {r.qid: i for i, r in enumerate(regs)}
             self._slo_stack = feedback.stack_slos([r.slo or SLO() for r in regs])
-            self._slo_sig = sig
-        return self._slo_stack
+            self._ctrl_dirty = False
+        return self._rows, self._slo_stack
 
     @staticmethod
     def _observed_re(reg: Registration, res: QueryResult) -> jnp.ndarray:
@@ -517,35 +803,71 @@ class StreamSession:
             rel = jnp.where(jnp.any(finite), jnp.max(jnp.where(finite, rel, 0.0)), jnp.inf)
         return rel
 
-    def _update_controllers(self, emitted: dict[int, QueryResult]) -> None:
+    @staticmethod
+    def _observed_re_batch(qos_key: str, batch: _EmitBatch) -> jnp.ndarray:
+        """Vectorized :meth:`_observed_re` over a batch: the per-row RE
+        vector (grouped queries reduce their group axis per row)."""
+        rel = jnp.asarray(batch.estimates[qos_key].relative_error)
+        if rel.ndim > 1:
+            finite = jnp.isfinite(rel)
+            rel = jnp.where(
+                jnp.any(finite, axis=-1),
+                jnp.max(jnp.where(finite, rel, 0.0), axis=-1),
+                jnp.inf,
+            )
+        return rel
+
+    def _update_controllers(self, singles: list, batches: list) -> None:
         """One vectorized controller step over all registrations; only
-        queries that emitted an error-bounded result this pane advance."""
-        regs = list(self._regs.values())
-        active = [r.qos_active and r.qid in emitted for r in regs]
-        if not any(active):
+        queries that emitted an error-bounded result this pane advance.
+
+        Batched emissions feed their stacked relative-error vectors in
+        directly (one segment per batch, no per-query materialization);
+        singleton emissions stack into one extra segment.  The whole
+        population then advances through a single
+        :func:`~.feedback.update_vector` call.
+        """
+        rows = None
+        segments = []
+        active_rows: list[int] = []
+        s_rows, s_re, s_nv = [], [], []
+        for reg, res in singles:
+            if not reg.qos_active:
+                continue
+            if rows is None:
+                rows, slo_stack = self._controller_layout()
+            s_rows.append(rows[reg.qid])
+            s_re.append(self._observed_re(reg, res).astype(jnp.float32))
+            s_nv.append(res.n_valid.astype(jnp.float32))
+        if s_rows:
+            segments.append((s_rows, jnp.stack(s_re), jnp.stack(s_nv)))
+            active_rows.extend(s_rows)
+        for batch in batches:
+            qos_key = batch.regs[0].qos_key
+            act = [i for i, r in enumerate(batch.regs) if r.qos_active]
+            if qos_key is None or not act:
+                continue
+            if rows is None:
+                rows, slo_stack = self._controller_layout()
+            rel = self._observed_re_batch(qos_key, batch)
+            idx = jnp.asarray(act, jnp.int32)
+            b_rows = [rows[batch.regs[i].qid] for i in act]
+            n_valid = jnp.stack(
+                [batch.counters[i][1] for i in act]
+            ).astype(jnp.float32)
+            segments.append((b_rows, rel[idx].astype(jnp.float32), n_valid))
+            active_rows.extend(b_rows)
+        if not active_rows:
             return
-        state = ControllerState(
-            fraction=jnp.asarray([r.fraction for r in regs], jnp.float32),
-            re_ema=jnp.asarray([r.re_ema for r in regs], jnp.float32),
-            steps=jnp.asarray([r.steps for r in regs], jnp.int32),
+        regs = list(self._regs.values())
+        state = feedback.stack_states(
+            (r.fraction, r.re_ema, r.steps) for r in regs
         )
-        re_obs = jnp.stack(
-            [
-                self._observed_re(r, emitted[r.qid]).astype(jnp.float32)
-                if on
-                else jnp.float32(0.0)
-                for r, on in zip(regs, active)
-            ]
-        )
-        n_valid = jnp.stack(
-            [
-                emitted[r.qid].n_valid.astype(jnp.float32) if on else jnp.float32(1.0)
-                for r, on in zip(regs, active)
-            ]
-        )
-        new = feedback.update_vector(
-            state, re_obs, n_valid, self._stacked_slos(regs), jnp.asarray(active)
-        )
+        re_obs, n_obs = feedback.scatter_observations(len(regs), segments)
+        active = [False] * len(regs)
+        for i in active_rows:
+            active[i] = True
+        new = feedback.update_vector(state, re_obs, n_obs, slo_stack, jnp.asarray(active))
         frac = jax.device_get(new.fraction)
         ema = jax.device_get(new.re_ema)
         for i, reg in enumerate(regs):

@@ -11,10 +11,20 @@ CI does.
 from __future__ import annotations
 
 import inspect
+import os
 
 import numpy as np
 
 _EXAMPLES = 10  # examples per @given when falling back
+
+
+def _profile_examples() -> int:
+    """Examples per @given, honoring the same ``HYPOTHESIS_PROFILE`` env
+    var the real-hypothesis profiles in ``conftest.py`` use: the nightly
+    soak sweeps 10x."""
+    if os.environ.get("HYPOTHESIS_PROFILE") == "nightly":
+        return _EXAMPLES * 10
+    return _EXAMPLES
 
 
 class _Strategy:
@@ -77,11 +87,21 @@ def given(**strats):
             limit = getattr(
                 wrapper,
                 "_fallback_max_examples",
-                getattr(fn, "_fallback_max_examples", _EXAMPLES),
+                getattr(fn, "_fallback_max_examples", _profile_examples()),
             )
             for i in range(limit):
                 drawn = {k: s.sample(rng, i) for k, s in strats.items()}
-                fn(*args, **kwargs, **drawn)
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except Exception:
+                    # the fallback's analogue of hypothesis print_blob: a
+                    # copy-pasteable reproduction of the failing example
+                    args_repr = ", ".join(f"{k}={v!r}" for k, v in drawn.items())
+                    print(
+                        f"\nFalsifying example (fallback, deterministic): "
+                        f"{fn.__name__}({args_repr})"
+                    )
+                    raise
 
         # present a signature WITHOUT the strategy params, so pytest does
         # not go looking for fixtures named after them

@@ -13,6 +13,10 @@ import sys
 
 import pytest
 
+# every cell spawns an 8-device jax subprocess; keep the whole sweep on one
+# xdist worker so parallel shards don't oversubscribe the CPU
+pytestmark = pytest.mark.xdist_group("subprocess-heavy")
+
 CELLS = [
     ("qwen1.5-0.5b", "train_4k"),
     ("olmoe-1b-7b", "train_4k"),

@@ -16,7 +16,10 @@ windows, multi-member thresholds, ext/sketch column subsets, and bf16
 value staging (f32 accumulation; parity against the pre-rounded oracle).
 """
 
+import os
+
 import numpy as np
+import pytest
 
 import jax.numpy as jnp
 
@@ -201,9 +204,11 @@ def test_megakernel_sketch_rows_shape():
     )
 
 
+@pytest.mark.xdist_group("tiling-overrides")
 def test_megakernel_block_override_hook():
     """kernels/tiling.py overrides reshape the grid without changing
-    results (the TPU block-tuning knob)."""
+    results (the TPU block-tuning knob); pinned to one xdist worker — the
+    override table is process-global state."""
     from repro.kernels import tiling
 
     sidx, vals, ok, scores, thr = _sidx_case(700, 1, 2, 30, 3, "random")
@@ -223,3 +228,26 @@ def test_megakernel_block_override_hook():
         tiling.clear_block_overrides()
     for a, b in zip(tuple(base), tuple(small)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-4)
+
+
+@pytest.mark.skipif(
+    "NIGHTLY_MEGA_N" not in os.environ,
+    reason="nightly-only: set NIGHTLY_MEGA_N (e.g. 65536) to run",
+)
+def test_megakernel_sidx_parity_nightly_large_n():
+    """Interpret-mode parity at nightly scale: N from ``NIGHTLY_MEGA_N``
+    (far past the PR sweep's 700-point ceiling, many block boundaries),
+    wide stratum count, mixed masking.  The nightly workflow runs this at
+    N=65536; PR runs skip it."""
+    n = int(os.environ["NIGHTLY_MEGA_N"])
+    sidx, vals, ok, scores, thr = _sidx_case(n, 2, 3, 96, 7, "random")
+    got = edge_megakernel_pallas(
+        jnp.asarray(vals), jnp.asarray(ok), jnp.asarray(scores), jnp.asarray(thr),
+        96, sidx=jnp.asarray(sidx), ext_idx=(0,), sk_idx=(2,), interpret=True,
+    )
+    from repro.kernels.edge_megakernel.ref import edge_megakernel_ref
+
+    ref = edge_megakernel_ref(
+        vals, ok, scores, thr, 96, sidx=sidx, ext_idx=(0,), sk_idx=(2,)
+    )
+    _assert_matches(got, ref, f"nightly-sidx[{n}]")

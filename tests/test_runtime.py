@@ -284,8 +284,14 @@ def test_bursty_soak_completes_with_cause_accounted_drops(pipe, panes):
     method queries (SRS preagg, Bernoulli, raw): the run completes, every
     dropped tuple is accounted by cause through the whole chain (queue
     ledger -> step reports -> session counters), and the per-pane mean
-    estimates that *were* emitted stay within 10% MAPE of exact."""
-    source = BurstySource(panes[:6], burst=10, gap_s=0.001, seed=2, repeat=10)
+    estimates that *were* emitted stay within 10% MAPE of exact.
+
+    ``SOAK_REPEAT`` scales the run: PRs offer 60 panes (repeat=10); the
+    nightly workflow sets 84 for a ~500-pane soak."""
+    import os
+
+    repeat = int(os.environ.get("SOAK_REPEAT", "10"))
+    source = BurstySource(panes[:6], burst=10, gap_s=0.001, seed=2, repeat=repeat)
     n_offered = len(source.panes)
     assert n_offered >= 50
 

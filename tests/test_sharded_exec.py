@@ -5,6 +5,12 @@ import os
 import subprocess
 import sys
 
+import pytest
+
+# each test spawns a full 8-device jax subprocess; serialize them onto one
+# xdist worker so parallel shards don't oversubscribe the CPU
+pytestmark = pytest.mark.xdist_group("subprocess-heavy")
+
 
 def _run(code: str, timeout=900):
     r = subprocess.run(

@@ -119,9 +119,11 @@ def test_preagg_equals_raw_single_device(stream_data):
     assert float(wr.estimate.mean) == pytest.approx(float(est_raw.mean), rel=1e-5)
 
 
+@pytest.mark.xdist_group("subprocess-heavy")
 def test_sharded_pipeline_modes_agree_subprocess():
     """preagg == raw on an 8-device mesh (runs in a subprocess so the
-    device-count env var doesn't leak into this process's jax)."""
+    device-count env var doesn't leak into this process's jax; grouped with
+    the other subprocess spawners on one xdist worker)."""
     code = """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

@@ -55,7 +55,14 @@ JIT_WRAPPERS = {
 
 # repo pane-loop hot paths: the host side of the continuous-query stream
 PANE_LOOP_FUNCTIONS = {
-    "src/repro/core/session.py": {"step", "run", "_emit"},
+    "src/repro/core/session.py": {
+        "step",
+        "run",
+        "_emit",
+        "_emit_due",
+        "_emit_batch",
+        "emit_all",
+    },
     "src/repro/core/pipeline.py": {"run_stream"},
     # the async runtime's dispatch path must stay sync-free un-suppressed;
     # its one blocking boundary (_retire) and the deferred event readback

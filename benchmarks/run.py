@@ -31,6 +31,7 @@ def main() -> None:
         multitenant_bench,
         query_bench,
         roofline,
+        uplink_codec_bench,
     )
 
     modules = [
@@ -42,6 +43,7 @@ def main() -> None:
         ("kernel_bench", kernel_bench),
         ("query_bench", query_bench),
         ("multitenant_bench", multitenant_bench),
+        ("uplink_codec_bench", uplink_codec_bench),
         ("roofline", roofline),
     ]
     args = sys.argv[1:]

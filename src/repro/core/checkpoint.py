@@ -11,10 +11,16 @@ serializes exactly that:
   * per registration: the pane ring (each pane's ``{column: {kind:
     state}}`` registry pytree + its counters), the controller slice
     (``fraction``/``re_ema``/``steps``), ``panes_seen`` (window emission
-    phase), and the downstream-volume counter;
-  * per session: ``pane_index`` and the ``total_comm_bytes`` /
+    phase), the downstream-volume counter, and ``pending_comm`` (uplink
+    bytes shipped since the last window emit);
+  * per session: ``pane_index``, the ``total_comm_bytes`` /
     ``total_dropped`` / ``total_passes`` diagnostics — so
-    ``WindowBatch.n_dropped`` accounting survives a restore boundary.
+    ``WindowBatch.n_dropped`` accounting survives a restore boundary —
+    and the uplink codec fingerprint (restoring under a *different* wire
+    format would silently change what the resumed stream's byte
+    accounting means, so a mismatch is rejected like a query-fingerprint
+    mismatch).  Byte counters are Python ints end to end: a long stream's
+    cumulative uplink crosses 2^31 and must round-trip exactly.
 
 Snapshots are **versioned** plain dicts of numpy arrays and Python
 scalars (no pickling): :func:`save` / :func:`load` round-trip them through
@@ -91,13 +97,20 @@ def snapshot(sess) -> dict:
                 "steps": int(reg.steps),
                 "panes_seen": int(reg.panes_seen),
                 "downstream_tuples": int(reg.downstream_tuples),
+                # additive (still version 1): bytes shipped since the last
+                # emit; absent in older snapshots (reconstructed on restore)
+                "pending_comm": int(reg.pending_comm),
                 "ring": ring,
             }
         )
+    codec_spec = getattr(sess.pipe, "codec_spec", None)
     return {
         "version": SNAPSHOT_VERSION,
         "pane_index": int(sess.pane_index),
         "total_comm_bytes": int(sess.total_comm_bytes),
+        # additive (still version 1): the uplink wire-format fingerprint
+        # this session's byte accounting was measured under
+        "uplink_codec": None if codec_spec is None else codec_spec.fingerprint(),
         "total_dropped": int(sess.total_dropped),
         # additive (still version 1): cause -> tuples breakdown of
         # total_dropped; absent in pre-runtime snapshots, restored as {}
@@ -127,6 +140,15 @@ def restore(sess, snap) -> None:
         raise ValueError(
             f"unsupported session snapshot version {version!r}; this build "
             f"reads version {SNAPSHOT_VERSION}"
+        )
+    codec_spec = getattr(sess.pipe, "codec_spec", None)
+    current_codec = None if codec_spec is None else codec_spec.fingerprint()
+    if "uplink_codec" in snap and snap["uplink_codec"] != current_codec:
+        raise ValueError(
+            f"snapshot was taken under uplink codec "
+            f"{snap['uplink_codec']!r} but the session is configured with "
+            f"{current_codec!r}; byte accounting is not comparable across "
+            f"wire formats — restore with the matching PipelineConfig"
         )
     regs = list(sess.registrations)
     stored = snap["registrations"]
@@ -171,6 +193,18 @@ def restore(sess, snap) -> None:
         reg.panes_seen = int(rec["panes_seen"])
         reg.downstream_tuples = int(rec["downstream_tuples"])
         reg.ring = ring
+        if "pending_comm" in rec:
+            reg.pending_comm = int(rec["pending_comm"])
+        else:
+            # older snapshot: reconstruct "bytes shipped since the last
+            # emit" from the ring — the panes arrived after the previous
+            # window boundary are the last panes_seen % stride of the ring
+            since_emit = min(
+                int(rec["panes_seen"]) % max(reg.window.stride, 1), len(ring)
+            )
+            reg.pending_comm = sum(
+                int(p.comm_bytes) for p in ring[len(ring) - since_emit:]
+            ) if since_emit else 0
     sess.pane_index = int(snap["pane_index"])
     sess.total_comm_bytes = int(snap["total_comm_bytes"])
     sess.total_dropped = int(snap["total_dropped"])

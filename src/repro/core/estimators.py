@@ -509,7 +509,10 @@ def sketch_quantile(weighted_bins: jnp.ndarray, q: float) -> jnp.ndarray:
 
     Continuous inversion: finds the first bin whose cumulative mass reaches
     ``q`` of the total and interpolates linearly between that bin's edges by
-    the within-bin mass fraction; 0 where the histogram is empty.  The
+    the within-bin mass fraction; NaN where the histogram is empty (an
+    empty group has no ``p50`` — a confident-looking 0 there masquerades as
+    data, and the query layer's ``n == 0`` guard turns the NaN into the
+    standard no-evidence report of ``relative_error = inf``).  The
     continuity matters beyond accuracy — it is what lets the bootstrap in
     :mod:`.bounds` resolve sampling error *finer than one bin* (a
     representative-value inversion would quantize replicate quantiles to the
@@ -533,7 +536,7 @@ def sketch_quantile(weighted_bins: jnp.ndarray, q: float) -> jnp.ndarray:
     lo_e = edges[idx]
     hi_e = edges[idx + 1]
     val = lo_e + frac * (hi_e - lo_e)
-    return jnp.where(total[..., 0] > 0, val, 0.0)
+    return jnp.where(total[..., 0] > 0, val, jnp.nan)
 
 
 class Accumulator:
@@ -572,6 +575,27 @@ class Accumulator:
     def payload_vectors(self) -> int:
         """(S+1)-float vectors this kind adds to one column's preagg uplink
         payload (excluding the n/total pair, shipped once per pass)."""
+        raise NotImplementedError
+
+    def payload_flatten(self, state):
+        """The wire-format view of a state: ordered ``(name, array,
+        quantize_ok, identity)`` rows, each array ``(S+1,)`` or
+        ``(S+1, K)`` with the stratum axis leading.
+
+        ``quantize_ok`` marks value rows a lossy codec may quantize;
+        count/population rows must declare ``False`` — they drive fpc and
+        error bounds and stay exact on the wire.  ``identity`` is the
+        scalar a codec may skip (the row's merge identity: 0 for additive
+        rows, ±inf for extrema lattices), so empty strata compress to a
+        bitmap bit.  Contract: ``payload_unflatten`` over these rows must
+        rebuild the state bit-exactly (see :mod:`.codec`)."""
+        raise NotImplementedError
+
+    def payload_unflatten(self, rows):
+        """Rebuild a state from a ``{name: array}`` mapping of decoded
+        :meth:`payload_flatten` rows.  Must be the bit-exact inverse on
+        untouched rows; derived leaves (e.g. the moments ``mean``) are
+        recomputed rather than shipped."""
         raise NotImplementedError
 
     def template(self):
@@ -649,6 +673,26 @@ class MomentsAccumulator(Accumulator):
 
     def payload_vectors(self) -> int:
         return 2  # wsum + raw second moment (mean/m2 derived cloud-side)
+
+    def payload_flatten(self, state):
+        # n/total are count rows (exact on the wire — fpc and every bound
+        # reads them); wsum/m2 are the value moments.  m2 ships *directly*
+        # rather than as the psum-style raw2 = m2 + n·mean²: recovering m2
+        # from raw2 cancels catastrophically when n·mean² >> m2, so the
+        # raw2 form could not honor the bit-exact unflatten contract.
+        return (
+            ("n", state.n, False, 0.0),
+            ("total", state.total, False, 0.0),
+            ("wsum", state.wsum, True, 0.0),
+            ("m2", state.m2, True, 0.0),
+        )
+
+    def payload_unflatten(self, rows):
+        n, total, wsum, m2 = rows["n"], rows["total"], rows["wsum"], rows["m2"]
+        # mean is derived exactly as every producer derives it, so a
+        # lossless round-trip reproduces it bitwise
+        mean = jnp.where(n > 0, wsum / jnp.maximum(n, 1.0), 0.0)
+        return StratumStats(n=n, total=total, wsum=wsum, m2=m2, mean=mean)
 
     def template(self):
         return StratumStats(*(0,) * 5)
@@ -738,6 +782,17 @@ class ExtremaAccumulator(Accumulator):
     def payload_vectors(self) -> int:
         return 2  # min + max
 
+    def payload_flatten(self, state):
+        # identities are the lattice units: a stratum that kept nothing
+        # holds (+inf, -inf) and costs one bitmap bit on the wire
+        return (
+            ("min", state.min, True, float("inf")),
+            ("max", state.max, True, float("-inf")),
+        )
+
+    def payload_unflatten(self, rows):
+        return Extrema(min=rows["min"], max=rows["max"])
+
     def template(self):
         return Extrema(*(0,) * 2)
 
@@ -795,6 +850,15 @@ class QuantileSketchAccumulator(Accumulator):
 
     def payload_vectors(self) -> int:
         return SKETCH_NUM_BINS
+
+    def payload_flatten(self, state):
+        # bin rows are integer-valued counts: HT expansion and quantile
+        # inversion read them as masses, so they never quantize (top-k +
+        # residual is the sanctioned lossy path — it preserves totals)
+        return (("bins", state.bins, False, 0.0),)
+
+    def payload_unflatten(self, rows):
+        return QuantileSketch(bins=rows["bins"])
 
     def template(self):
         return QuantileSketch(bins=0)

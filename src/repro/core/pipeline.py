@@ -62,6 +62,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from . import codec as wirecodec
 from . import estimators, feedback, sampling
 from . import query as aqp
 
@@ -105,6 +106,15 @@ class PipelineConfig:
     *staged* in on their way into the kernel — ``"bfloat16"`` halves the
     value-column VMEM/HBM traffic; every kernel accumulator stays f32
     (EDG004's contract), so only the input rounding differs.
+
+    ``uplink_codec`` selects the preagg wire format (:mod:`.codec`):
+    ``None`` ships the dense analytic payload; ``"sparse"`` /
+    ``"topk<k>"`` / ``"quantize16"`` / ``"quantize8"`` / ``"delta"``
+    route every preagg uplink frame through the named codec — estimates
+    then consolidate from the *decoded* states and the session/runtime
+    byte accounting reports the measured encoded bytes instead of the
+    dense model.  Raw-mode queries are untouched (their compacted tuple
+    buffer is already sample-proportional).
     """
 
     method: str = "srs"  # srs | bernoulli | neyman  (legacy-API default)
@@ -113,8 +123,10 @@ class PipelineConfig:
     raw_capacity: int | None = None  # static per-shard buffer for raw mode
     backend: str = "segment"  # segment | pallas | fused (edge reduction)
     staging_dtype: str = "float32"  # float32 | bfloat16 (fused kernel inputs)
+    uplink_codec: str | None = None  # None | sparse | topk<k> | quantize{8,16} | delta
 
     def __post_init__(self):
+        wirecodec.resolve_codec(self.uplink_codec)  # fail fast on bad specs
         if self.backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}; got {self.backend!r}")
         if self.staging_dtype not in STAGING_DTYPES:
@@ -681,6 +693,10 @@ class EdgeCloudPipeline:
         self.config = config
         self.mesh = mesh
         self.axis_names = axis_names
+        # resolved uplink wire codec (None = dense analytic payload);
+        # stateful codecs (delta) hand out per-stream instances via
+        # for_stream(), so this is the *spec*, never a live DPCM state
+        self.codec_spec = wirecodec.resolve_codec(config.uplink_codec)
         self._plans: dict[Query, Plan] = {}
         self._execs: dict[tuple[Query, bool], callable] = {}
         self._passes: dict[tuple[Plan, bool], callable] = {}
@@ -907,6 +923,17 @@ class EdgeCloudPipeline:
         cols = {c: jnp.asarray(cols[c], jnp.float32) for c in plan.columns}
         return lat, lon, cols, valid
 
+    def _codec_rebase(self, plan: Plan, res: QueryResult, key) -> QueryResult:
+        """Ship a one-shot query's consolidated states through the uplink
+        codec: estimates re-finalize from the *decoded* states (bit-identical
+        for lossless codecs — the property tests' contract) and
+        ``comm_bytes`` becomes the frame's measured encoded bytes instead of
+        the analytic dense model.  One-shot executes open a fresh stream, so
+        a delta codec degenerates to a keyframe here."""
+        stats, nbytes = wirecodec.roundtrip(self.codec_spec.for_stream(), res.stats)
+        estimates, stats = self.finalize_fn(plan, 1)(stats, key)
+        return res._replace(estimates=estimates, stats=stats, comm_bytes=nbytes)
+
     def execute(self, query: Query, key, window, fraction=1.0) -> QueryResult:
         """Evaluate a declarative query over one window on one edge node.
 
@@ -917,6 +944,8 @@ class EdgeCloudPipeline:
         lat, lon, cols, valid = self._window_arrays(window, plan)
         fn = self._query_fn(query, sharded=False)
         res = fn(key, lat, lon, cols, valid, jnp.float32(fraction))
+        if self.codec_spec is not None and plan.query.mode == "preagg":
+            res = self._codec_rebase(plan, res, key)
         # upstream drop accounting is a host-side property of the window
         return res._replace(n_dropped=int(getattr(window, "n_dropped", 0)))
 
@@ -928,6 +957,8 @@ class EdgeCloudPipeline:
         lat, lon, cols, valid = self._window_arrays(window, plan)
         fn = self._query_fn(query, sharded=True)
         res = fn(key, lat, lon, cols, valid, jnp.float32(fraction))
+        if self.codec_spec is not None and plan.query.mode == "preagg":
+            res = self._codec_rebase(plan, res, key)
         return res._replace(n_dropped=int(getattr(window, "n_dropped", 0)))
 
     # -- legacy single-estimate API (shim over the canonical query) ---------

@@ -506,22 +506,28 @@ def _bounded_estimate(value, lo, hi, n_g, pop_g) -> AggEstimate:
     with no sampled evidence (``n == 0``) reports an *infinite* relative
     error — a zero-width interval around a vacuous point estimate is not
     certainty, and a finite-looking RE of 0 would collapse the QoS
-    fraction exactly when the stream goes quiet."""
-    lo = jnp.minimum(lo, value)
-    hi = jnp.maximum(hi, value)
-    up = jnp.where(hi == value, 0.0, hi - value)
-    down = jnp.where(lo == value, 0.0, value - lo)
+    fraction exactly when the stream goes quiet.  A NaN point estimate
+    (e.g. a quantile of an *empty* histogram) means "no evidence", not
+    zero: the NaN is surfaced as the value, the interval pinned to
+    (-inf, inf) with infinite moe/relative error, instead of letting the
+    NaN poison the bound arithmetic."""
+    novalue = jnp.isnan(value)
+    safe = jnp.where(novalue, 0.0, value)
+    lo = jnp.minimum(jnp.where(novalue, -jnp.inf, lo), safe)
+    hi = jnp.maximum(jnp.where(novalue, jnp.inf, hi), safe)
+    up = jnp.where(hi == safe, 0.0, hi - safe)
+    down = jnp.where(lo == safe, 0.0, safe - lo)
     moe = jnp.maximum(up, down)
     rel = jnp.where(
         moe > 0,
         jnp.where(
-            jnp.isfinite(value) & (jnp.abs(value) > 0),
-            moe / jnp.maximum(jnp.abs(value), 1e-30),
+            jnp.isfinite(safe) & (jnp.abs(safe) > 0),
+            moe / jnp.maximum(jnp.abs(safe), 1e-30),
             jnp.inf,
         ),
         jnp.zeros_like(moe),
     )
-    rel = jnp.where(n_g > 0, rel, jnp.inf)
+    rel = jnp.where((n_g > 0) & ~novalue, rel, jnp.inf)
     return AggEstimate(
         value=value, moe=moe, ci_low=lo, ci_high=hi,
         relative_error=rel, n=n_g, population=pop_g,
@@ -707,11 +713,17 @@ def finalize(plan: Plan, table: StratumTable, stats: dict[str, dict], key=None) 
 
 
 def preagg_bytes(plan: Plan, num_slots: int) -> int:
-    """Analytic per-shard payload of preagg mode: n/total are shared across
-    columns (psummed once); every other (S+1)-float vector is declared by
-    the accumulator kinds the plan carries per column (moments: wsum/raw2,
-    extrema: min/max, sketch: its bin rows).  4-byte floats.  A single
-    moment-only column gives the legacy 4-vector payload."""
+    """Analytic *dense model* of the preagg uplink: n/total are shared
+    across columns (psummed once); every other (S+1)-float vector is
+    declared by the accumulator kinds the plan carries per column
+    (moments: wsum/raw2, extrema: min/max, sketch: its bin rows).  4-byte
+    floats.  A single moment-only column gives the legacy 4-vector
+    payload.
+
+    When ``PipelineConfig.uplink_codec`` is set, this dense figure is the
+    *baseline* the codec's measured encoded bytes are compared against —
+    result/session ``comm_bytes`` then report the measured truth, and the
+    ratio dense/encoded is the compression the codec bought."""
     vectors = 2  # shared n/total
     for _c, kinds in plan.column_kinds:
         vectors += sum(estimators.accumulator(k).payload_vectors() for k in kinds)
@@ -725,8 +737,10 @@ def raw_bytes(plan: Plan, capacity: int) -> int:
 
 
 def refined_preagg_bytes(fused: FusedPlan, num_slots: int) -> int:
-    """Analytic per-shard payload of a *refined* fused pass (per-member
-    thinned states instead of one union accumulation).
+    """Analytic *dense model* of a *refined* fused pass's uplink
+    (per-member thinned states instead of one union accumulation).  As
+    with :func:`preagg_bytes`, a configured ``uplink_codec`` replaces this
+    model with measured encoded bytes in ``comm_bytes`` accounting.
 
     Each member ships its own realized ``n`` vector (its nested subsample's
     per-stratum sizes) plus its plan-declared per-column accumulator

@@ -215,6 +215,10 @@ class RuntimeStats:
     # the aggregate compile_count) — the multi-tenant churn contract's
     # observability surface; empty when the session exposes no pipeline
     compile_cache: dict = dataclasses.field(default_factory=dict)
+    # uplink byte accounting: cumulative comm_bytes (measured encoded bytes
+    # when an uplink codec is configured, the analytic dense model otherwise)
+    # plus the codec fingerprint the figure was measured under (None = dense)
+    uplink: dict = dataclasses.field(default_factory=dict)
 
     @property
     def dropped_tuples(self) -> int:
@@ -605,4 +609,21 @@ class StreamRuntime:
                 and hasattr(pipe, "cache_snapshot")
                 else {}
             ),
+            uplink={
+                "total_comm_bytes": int(
+                    getattr(self.session, "total_comm_bytes", 0)
+                ),
+                "uplink_codec": (
+                    spec.fingerprint()
+                    if (
+                        spec := getattr(
+                            getattr(self.session, "pipe", None),
+                            "codec_spec",
+                            None,
+                        )
+                    )
+                    is not None
+                    else None
+                ),
+            },
         )

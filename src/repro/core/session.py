@@ -92,6 +92,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from . import codec as wirecodec
 from . import feedback
 from . import query as aqp
 from .feedback import SLO, ControllerState
@@ -148,6 +149,12 @@ class Registration:
     # under refinement a low-fraction member accumulates its own, smaller,
     # nested sample here instead of the group max's
     downstream_tuples: int | jnp.ndarray = 0
+    # uplink bytes shipped for this query since its previous window emit
+    # (host int, exact past 2^31).  Emitted windows report *this* — bytes
+    # newly shipped — rather than re-summing every overlapped pane, so
+    # sliding/hopping window comm totals over a span add up to the
+    # session's actual uplink instead of multiply-counting shared panes.
+    pending_comm: int = 0
 
     @property
     def qos_active(self) -> bool:
@@ -189,7 +196,7 @@ class _FusionGroup:
     look them up, and a membership change invalidates exactly this group.
     """
 
-    __slots__ = ("key", "members", "_fused", "_pass_fn", "_refined_fn")
+    __slots__ = ("key", "members", "_fused", "_pass_fn", "_refined_fn", "_codec")
 
     def __init__(self, key: tuple):
         self.key = key
@@ -197,11 +204,17 @@ class _FusionGroup:
         self._fused: FusedPlan | None = None
         self._pass_fn = None
         self._refined_fn = None
+        # per-stream uplink codec instances ("shared" / member qid -> codec);
+        # membership changes drop them so stateful (delta) streams re-open
+        # with a keyframe instead of diffing against a differently-shaped
+        # previous frame
+        self._codec: dict = {}
 
     def invalidate(self) -> None:
         self._fused = None
         self._pass_fn = None
         self._refined_fn = None
+        self._codec = {}
 
     def fused_plan(self) -> FusedPlan:
         if self._fused is None:
@@ -240,7 +253,9 @@ def _carve_result(batch: _EmitBatch, i: int) -> QueryResult:
         n_valid=n_v,
         n_overflow=n_o,
         n_truncated=n_t,
-        comm_bytes=jnp.int32(comm),
+        # host int, never a jnp.int32: cumulative uplink past 2^31 bytes
+        # must not wrap negative on long streams
+        comm_bytes=comm,
         n_dropped=dropped,
     )
 
@@ -293,6 +308,9 @@ class SessionStep(NamedTuple):
       registration.
     comm_bytes: total edge->cloud payload of this pane's shared passes (one
       per fusion group — the fused uplink cost of the whole QuerySet).
+      The analytic dense model by default; the *measured* encoded frame
+      bytes when ``PipelineConfig.uplink_codec`` is set.  Always a host
+      int — cumulative totals stay exact past 2^31.
     n_dropped: tuples shed before this pane reached the device (bounded
       time windows, ingest-queue backpressure, load shedding).
     pane_index: 0-based index of the pane within the session.
@@ -497,9 +515,38 @@ class StreamSession:
             return aqp.raw_bytes(plan, cap)
         return aqp.preagg_bytes(plan, self.pipe.table.num_slots)
 
+    def _codec_ship(self, grp: _FusionGroup, slot, stats) -> tuple[dict, int]:
+        """Ship one uplink stream's registry states through the configured
+        wire codec (see :mod:`.codec`): returns the *decoded* states the
+        cloud tier consolidates plus the frame's measured encoded bytes —
+        the byte accounting truth that replaces :meth:`_analytic_comm`'s
+        dense model when ``PipelineConfig.uplink_codec`` is set.
+
+        ``slot`` names the stream within the group (``"shared"`` for the
+        union pass, the member qid for refined per-member frames); stateful
+        codecs (delta) keep per-stream DPCM state here, dropped on any
+        membership change (group invalidation) and on ``restore`` so those
+        boundaries re-open with a keyframe.  Encoding is the pane loop's
+        one deliberate device sync: the uplink serialization boundary
+        itself, where states become wire bytes by definition.
+        """
+        stream = grp._codec.get(slot)
+        if stream is None:
+            stream = grp._codec[slot] = self.pipe.codec_spec.for_stream()
+        return wirecodec.roundtrip(stream, stats)
+
     def _window_counters(self, reg: Registration) -> tuple:
         """This query's window-level counters, summed over its pane ring
-        (device-lazy adds; host ints for the byte/drop accounting)."""
+        (device-lazy adds; host ints for the byte/drop accounting).
+
+        ``comm`` is the bytes *newly shipped* for this query since its
+        previous emit (``pending_comm``), not a re-sum of every pane in
+        the ring: a sliding window re-reads panes it already paid for, so
+        summing the overlap would report more uplink over a span than the
+        session actually spent.  Tumbling windows are unchanged (every
+        pane is new).  Read non-destructively — ``emit_all``'s serving
+        reads must not consume the counter; ``step`` resets it only after
+        a scheduled emit."""
         panes = reg.ring
         n_sampled = panes[0].n_sampled
         n_valid = panes[0].n_valid
@@ -510,7 +557,7 @@ class StreamSession:
             n_valid = n_valid + p.n_valid
             n_overflow = n_overflow + p.n_overflow
             n_truncated = n_truncated + p.n_truncated
-        comm = sum(p.comm_bytes for p in panes)
+        comm = reg.pending_comm
         dropped = sum(p.n_dropped for p in panes)
         return (n_sampled, n_valid, n_overflow, n_truncated, comm, dropped)
 
@@ -543,8 +590,9 @@ class StreamSession:
             n_valid=n_valid,
             n_overflow=n_overflow,
             n_truncated=n_truncated,
-            # uplink spent on this window's span: one shared pass per pane
-            comm_bytes=jnp.int32(comm),
+            # uplink newly spent since this query's previous emit (host
+            # int — exact past 2^31; see _window_counters)
+            comm_bytes=comm,
             # window-level drop accounting: tuples the window's panes shed
             # upstream (survives checkpoint/restore — the ring carries it)
             n_dropped=dropped,
@@ -675,9 +723,24 @@ class StreamSession:
                 outs, _ = fn(
                     key, lat, lon, cols, valid, jnp.asarray(fractions, jnp.float32)
                 )
-                comm = aqp.refined_preagg_bytes(fused, self.pipe.table.num_slots)
                 zero = jnp.int32(0)  # refined pass is preagg-only: no buffer
-                per_member = [(st, ns, nv, no, zero) for st, ns, nv, no in outs]
+                if self.pipe.codec_spec is not None:
+                    # refined passes ship one encoded frame per member (each
+                    # member's thinned states are its own uplink stream)
+                    shipped = [
+                        self._codec_ship(grp, reg.qid, st)
+                        for reg, (st, _ns, _nv, _no) in zip(members, outs)
+                    ]
+                    comm = sum(nb for _st, nb in shipped)
+                    per_member = [
+                        (st, ns, nv, no, zero, nb)
+                        for (st, nb), (_st, ns, nv, no) in zip(shipped, outs)
+                    ]
+                else:
+                    comm = aqp.refined_preagg_bytes(fused, self.pipe.table.num_slots)
+                    per_member = [
+                        (st, ns, nv, no, zero, comm) for st, ns, nv, no in outs
+                    ]
             else:
                 fn = grp._pass_fn
                 if fn is None:
@@ -685,8 +748,14 @@ class StreamSession:
                 stats, n_sampled, n_valid, n_overflow, n_truncated, _ = fn(
                     key, lat, lon, cols, valid, jnp.float32(max(fractions))
                 )
-                # analytic, host-side: avoid syncing on the device pass here
-                comm = self._analytic_comm(fused, lat.shape[0])
+                if self.pipe.codec_spec is not None and fused.mode == "preagg":
+                    # one encoded union frame serves the whole group; the
+                    # members below carve the *decoded* states, so their
+                    # estimates reflect exactly what crossed the wire
+                    stats, comm = self._codec_ship(grp, "shared", stats)
+                else:
+                    # analytic, host-side: avoid syncing on the device pass
+                    comm = self._analytic_comm(fused, lat.shape[0])
                 per_member = []
                 for reg in members:
                     kinds_map = reg.plan.column_kind_map
@@ -697,11 +766,11 @@ class StreamSession:
                         for c in reg.plan.columns
                     }
                     per_member.append(
-                        (carved, n_sampled, n_valid, n_overflow, n_truncated)
+                        (carved, n_sampled, n_valid, n_overflow, n_truncated, comm)
                     )
             comm_total += comm
             self.total_passes += 1
-            for reg, (stats_m, n_s, n_v, n_o, n_t) in zip(members, per_member):
+            for reg, (stats_m, n_s, n_v, n_o, n_t, comm_m) in zip(members, per_member):
                 reg.ring.append(
                     _Pane(
                         stats=stats_m,
@@ -710,15 +779,18 @@ class StreamSession:
                         n_overflow=n_o,
                         n_truncated=n_t,
                         n_dropped=n_dropped,
-                        comm_bytes=comm,
+                        comm_bytes=comm_m,
                     )
                 )
                 del reg.ring[: -reg.window.size]
                 reg.panes_seen += 1
+                reg.pending_comm += comm_m
                 reg.downstream_tuples = reg.downstream_tuples + n_s
                 if reg.panes_seen % reg.window.stride == 0:
                     due.append(reg)
         singles, batches = self._emit_due(due, key, emitted)
+        for reg in due:  # emitted windows consumed their newly-shipped bytes
+            reg.pending_comm = 0
         self._update_controllers(singles, batches)
         self.pane_index += 1
         self.total_comm_bytes += comm_total
@@ -777,6 +849,11 @@ class StreamSession:
         # next update; layout (rows / SLO stack) is membership-keyed and
         # membership did not change, but re-deriving it is cheap and safe
         self._ctrl_dirty = True
+        # stateful uplink codecs (delta) lose their cross-pane reference
+        # frame at a restart boundary: drop the streams so the first pane
+        # after restore ships a keyframe (still lossless, just larger)
+        for grp in self._fusion_groups.values():
+            grp._codec = {}
         return self
 
     # -- vectorized QoS ------------------------------------------------------

@@ -223,6 +223,12 @@ def test_register_custom_accumulator_end_to_end(rng):
         def payload_vectors(self):
             return 1
 
+        def payload_flatten(self, state):
+            return (("abs", state, True, 0.0),)
+
+        def payload_unflatten(self, rows):
+            return rows["abs"]
+
         def template(self):
             return 0
 

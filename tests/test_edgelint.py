@@ -191,6 +191,10 @@ class FullKind(Accumulator):
         return state
     def payload_vectors(self):
         return 1
+    def payload_flatten(self, state):
+        return (("v", state, True, 0.0),)
+    def payload_unflatten(self, rows):
+        return rows["v"]
     def interval(self, state, n, confidence):
         return (0.0, 0.0)
 
@@ -206,7 +210,14 @@ def test_edg003_fires_on_partial_accumulator(tmp_path):
     res = lint_tree(tmp_path, {"src/repro/core/plugin.py": EDG003_BAD})
     found = [f for f in res.findings if f.code == "EDG003"]
     assert len(found) == 1
-    for missing in ("merge_panes", "psum", "zero_overflow", "payload_vectors"):
+    for missing in (
+        "merge_panes",
+        "psum",
+        "zero_overflow",
+        "payload_vectors",
+        "payload_flatten",
+        "payload_unflatten",
+    ):
         assert missing in found[0].message
 
 

@@ -12,7 +12,8 @@ mergeability this rule makes impossible.
 Mechanics: every class whose instance (or class object) is passed to a
 call of ``register_accumulator`` must provide the full surface —
 ``accumulate / merge / merge_panes / psum / zero_overflow /
-payload_vectors / interval`` — either in its own body or inherited from an
+payload_vectors / payload_flatten / payload_unflatten / interval`` —
+either in its own body or inherited from an
 ancestor *with a real implementation* (a body that is only
 ``raise NotImplementedError`` does not count; default implementations like
 the base ``interval -> None`` do).
@@ -32,6 +33,12 @@ REQUIRED_METHODS = (
     "psum",
     "zero_overflow",
     "payload_vectors",
+    # wire-format hooks: the uplink codec (core/codec.py) can only skip,
+    # quantize, or delta-encode a kind that declares its row view and its
+    # exact inverse — a kind without them silently falls off the encoded
+    # uplink path the moment a codec is configured
+    "payload_flatten",
+    "payload_unflatten",
     "interval",
 )
 
@@ -62,7 +69,8 @@ class AccumulatorProtocolRule(Rule):
     name = "accumulator-protocol"
     guarantee = (
         "every register_accumulator kind implements the full mergeable surface "
-        "(accumulate/merge/merge_panes/psum/zero_overflow/payload_vectors/interval)"
+        "(accumulate/merge/merge_panes/psum/zero_overflow/payload_vectors/"
+        "payload_flatten/payload_unflatten/interval)"
     )
 
     def check(self, project: Project) -> Iterator[Finding]:

@@ -212,6 +212,14 @@ def restore(sess, snap) -> None:
         str(k): int(v) for k, v in snap.get("total_dropped_by_cause", {}).items()
     }
     sess.total_passes = int(snap["total_passes"])
+    # stateful uplink codecs (delta) lose their cross-pane reference frame
+    # at any restore boundary — cleared here rather than in
+    # StreamSession.restore so a direct module-level restore() gets the
+    # same guarantee: the first pane after restore ships a keyframe
+    # (still lossless, just larger) instead of diffing against a frame
+    # the restored stream never saw
+    for grp in getattr(sess, "_fusion_groups", {}).values():
+        grp._codec = {}
 
 
 def rotation_path(path, age: int) -> str:

@@ -16,11 +16,13 @@ the analytic dense *model*.
 Codecs (composable through :func:`resolve_codec` specs):
 
 * :class:`SparseCodec` (``"sparse"``) — lossless.  Per row, a packed
-  stratum-occupancy bitmap (an entry differing from the row's merge
-  identity marks its stratum occupied) gates a gather-compaction of the
-  occupied rows; wide sketch rows additionally compact their bin columns
-  through a second bitmap.  Decode scatters back into identity-filled
-  arrays — bit-exact.
+  stratum-occupancy bitmap (an entry whose f32 *bit pattern* differs from
+  the row's merge identity marks its stratum occupied) gates a
+  gather-compaction of the occupied rows; wide sketch rows additionally
+  compact their bin columns through a second bitmap.  Decode scatters
+  back into identity-filled arrays — bit-exact, down to the sign of zero
+  and NaN payloads (occupancy compares bits, not float equality, which
+  would drop a stored ``-0.0`` as identity ``0.0``).
 * :class:`TopKSketchCodec` (``"topk<k>"``) — lossy, totals-exact.  Sketch
   bin rows keep their top-k bins verbatim and spread the (integer)
   residual count uniformly over the remaining bins of the occupied
@@ -40,8 +42,11 @@ Codecs (composable through :func:`resolve_codec` specs):
   zero and cost a bitmap bit).  XOR — not arithmetic ``cur - prev`` — is
   deliberate: the f32 difference of two f32 values is generally not
   representable in f32, so arithmetic DPCM could not honor the bit-exact
-  contract; XOR residuals always invert exactly.  A keyframe (plain
-  sparse frame) opens every stream and follows any schema change
+  contract; XOR residuals always invert exactly.  The inner coder's
+  bitwise occupancy matters doubly here: an exact sign flip of a value
+  XORs to the ``-0.0`` bit pattern, which a float occupancy test would
+  silently drop, desynchronizing both ends of the stream.  A keyframe
+  (plain sparse frame) opens every stream and follows any schema change
   (membership churn, restore).
 
 Byte accounting: ``EncodedPayload.nbytes`` counts the packed buffers plus
@@ -165,11 +170,22 @@ def roundtrip(codec: "UplinkCodec", stats: dict) -> tuple[dict, int]:
     return unflatten_stats(codec.decode(payload)), payload.nbytes
 
 
+def _bits(a) -> np.ndarray:
+    """The f32 bit patterns of ``a`` (shape-preserving uint32 view)."""
+    return np.ascontiguousarray(a, np.float32).view(np.uint32)
+
+
 def _occupied(flat: np.ndarray, identity: float) -> np.ndarray:
-    """Boolean occupancy along axis 0: any entry differing bitwise-ish
-    from the identity (NaN entries compare unequal, hence occupied)."""
-    with np.errstate(invalid="ignore"):
-        return np.any(flat != np.float32(identity), axis=1)
+    """Boolean occupancy along axis 0, compared on f32 *bit patterns*: an
+    entry is occupied iff its bits differ from the identity's.  Bitwise —
+    not float — equality is load-bearing three ways: NaN payloads register
+    occupied, a ``-0.0`` entry differs from a ``+0.0`` identity (lossless
+    codecs round-trip the sign of zero), and a delta frame's
+    ``0x80000000`` XOR residual — an exact sign flip of the underlying
+    value, e.g. ``wsum`` crossing ``x`` to ``-x`` or ``min`` going
+    ``+inf`` to ``-inf`` — ships instead of being dropped as
+    ``-0.0 == 0.0``, which would silently desynchronize the DPCM stream."""
+    return np.any(_bits(flat) != _bits(np.float32(identity)), axis=1)
 
 
 class UplinkCodec:
@@ -309,7 +325,11 @@ class TopKSketchCodec(SparseCodec):
         if not (row.kind == "sketch" and row.name == "bins" and wide):
             return super()._encode_row(row)
         arr = row.array
-        occ = _occupied(arr, 0.0)
+        # float — not bitwise — occupancy on purpose: this path is lossy
+        # and indexes bins via flatnonzero (which reads -0.0 as empty), so
+        # a row of zero-mass bins must count as unoccupied here
+        with np.errstate(invalid="ignore"):
+            occ = np.any(arr != 0.0, axis=1)
         if not occ.any():
             return "empty", None, []
         ranges, idx_parts, val_parts, residuals = [], [], [], []
@@ -395,8 +415,15 @@ class QuantizeCodec(SparseCodec):
         # quantize against the exact f32 value the decoder will read off
         # the wire, or the declared half-step bound would not survive the
         # f64 -> f32 scale rounding; qmax sits below the dtype max with
-        # enough headroom that the f32 rounding cannot push rint past it
-        scale = float(np.float32(amax / g["qmax"])) if amax > 0 else 1.0
+        # enough headroom that the f32 rounding cannot push rint past it.
+        # Floored at the smallest normal f32: a subnormal amax can
+        # underflow amax/qmax to 0 in f32 (divide-by-zero, everything
+        # clips to qmax and decodes to 0, the declared bound scale/2 = 0)
+        # or leave it subnormal; the floor keeps the division normal,
+        # rint(sub/scale) inside the clip range, and the half-step bound
+        # intact — with scale = tiny, |sub| <= amax <= qmax*tiny
+        tiny = float(np.finfo(np.float32).tiny)
+        scale = max(float(np.float32(amax / g["qmax"])), tiny) if amax > 0 else 1.0
         with np.errstate(invalid="ignore"):
             q = np.clip(np.rint(sub / scale), -g["qmax"], g["qmax"])
         q = np.where(np.isnan(q), 0, q).astype(g["dtype"])
@@ -422,10 +449,6 @@ class QuantizeCodec(SparseCodec):
         out[q == g["neg_inf"]] = -np.inf
         out[q == g["nan"]] = np.nan
         return out
-
-
-def _bits(a: np.ndarray) -> np.ndarray:
-    return np.ascontiguousarray(a, np.float32).view(np.uint32)
 
 
 class DeltaCodec(UplinkCodec):

@@ -847,13 +847,10 @@ class StreamSession:
         ckpt.restore(self, snapshot)
         # controller arrays re-stack from the restored host mirrors at the
         # next update; layout (rows / SLO stack) is membership-keyed and
-        # membership did not change, but re-deriving it is cheap and safe
+        # membership did not change, but re-deriving it is cheap and safe.
+        # (ckpt.restore itself drops stateful uplink codec streams, so the
+        # first pane after any restore path ships a keyframe.)
         self._ctrl_dirty = True
-        # stateful uplink codecs (delta) lose their cross-pane reference
-        # frame at a restart boundary: drop the streams so the first pane
-        # after restore ships a keyframe (still lossless, just larger)
-        for grp in self._fusion_groups.values():
-            grp._codec = {}
         return self
 
     # -- vectorized QoS ------------------------------------------------------

@@ -257,6 +257,93 @@ def test_delta_stream_frames_and_reference_guard():
         fresh.decode(delta_frame)
 
 
+def _row(name, vals, identity=0.0, quantize_ok=False):
+    return wirecodec.Row(
+        column="c", kind="moments", name=name,
+        array=np.asarray(vals, np.float32), quantize_ok=quantize_ok,
+        identity=identity,
+    )
+
+
+def _assert_rows_bit_equal(expected, decoded, msg=""):
+    for e, d in zip(expected, decoded):
+        np.testing.assert_array_equal(
+            np.asarray(e.array, np.float32).view(np.uint32),
+            np.asarray(d.array, np.float32).view(np.uint32),
+            err_msg=f"{msg}:{e.name}",
+        )
+
+
+def test_delta_exact_sign_flip_lossless():
+    """Regression: an exact negation (cur == -prev) XORs to the -0.0 bit
+    pattern, which a float occupancy test drops as unoccupied — the
+    decoder would reconstruct the *old* value and the DPCM stream would
+    diverge permanently (5 -> -5 -> 7 decoding as 5 -> 5 -> -7).  Bitwise
+    occupancy must ship it.  Covers the extrema variant too: a ``min``
+    row's +inf identity flipping to -inf is the same single-bit XOR."""
+    codec = wirecodec.DeltaCodec()
+    inf = np.inf
+    seq = [
+        [_row("wsum", [5.0, 0.0, 2.0]), _row("min", [inf, inf], identity=inf)],
+        [_row("wsum", [-5.0, 0.0, 2.0]), _row("min", [-inf, inf], identity=inf)],
+        [_row("wsum", [7.0, 0.0, 2.0]), _row("min", [-inf, inf], identity=inf)],
+    ]
+    for i, rows in enumerate(seq):
+        payload = codec.encode(rows)
+        assert payload.frame == ("key" if i == 0 else "delta")
+        _assert_rows_bit_equal(rows, codec.decode(payload), f"frame{i}")
+
+
+def test_sparse_roundtrip_preserves_sign_of_zero():
+    """Regression: a stored -0.0 compares float-equal to the +0.0
+    identity; the advertised bit-exact round-trip must keep its sign bit
+    (bitwise occupancy), not decode it as +0.0."""
+    rows = [_row("wsum", [-0.0, 0.0, 3.0])]
+    decoded = wirecodec.SparseCodec().decode(wirecodec.SparseCodec().encode(rows))
+    _assert_rows_bit_equal(rows, decoded)
+    assert np.signbit(decoded[0].array[0]) and not np.signbit(decoded[0].array[1])
+
+
+@pytest.mark.parametrize("bits", (16, 8))
+def test_quantize_subnormal_amax_scale_floor(bits):
+    """Regression: a subnormal amax underflows the f32 scale amax/qmax to
+    0 — division by zero, every value clips to qmax and decodes to 0, and
+    the declared half-step bound reads 0.  The scale must floor at the
+    smallest normal f32 and the declared bound must still hold."""
+    amax = float(np.float32(4e-45))  # subnormal; /qmax underflows to 0.0
+    rows = [_row("wsum", [amax, 0.0], quantize_ok=True)]
+    codec = wirecodec.QuantizeCodec(bits)
+    with np.errstate(divide="raise"):
+        payload = codec.encode(rows)
+    tag, meta, _ = payload.entries[0]
+    assert meta[0] == "quant" and meta[2] > 0  # declared bound scale/2 > 0
+    decoded = codec.decode(payload)[0].array
+    assert np.isfinite(decoded).all()
+    assert abs(float(decoded[0]) - amax) <= meta[2]
+
+
+def test_module_level_restore_reopens_delta_streams(table, panes):
+    """Regression: ``checkpoint.restore`` called directly (not through
+    ``StreamSession.restore``) must also drop per-stream DPCM state, so
+    the first post-restore pane ships a keyframe instead of diffing
+    against a reference frame the restored stream never saw."""
+    pipe = EdgeCloudPipeline(
+        table, PipelineConfig(raw_capacity=PANE, uplink_codec="delta")
+    )
+    sess = StreamSession(pipe)
+    reg = sess.register(Query(aggs=(AggSpec("mean", "value"),)))
+    sess.step(jax.random.key(0), panes[0])
+    snap = checkpoint.snapshot(sess)
+    sess.step(jax.random.key(1), panes[1])  # advances the DPCM reference
+    assert any(grp._codec for grp in sess._fusion_groups.values())
+    checkpoint.restore(sess, snap)
+    assert all(grp._codec == {} for grp in sess._fusion_groups.values())
+    # the re-keyed stream still serves lossless estimates
+    step = sess.step(jax.random.key(1), panes[1])
+    est = step.results[reg.qid].estimates["mean_value"]
+    assert np.isfinite(float(est.value))
+
+
 def test_resolve_codec_specs():
     assert wirecodec.resolve_codec(None) is None
     assert isinstance(wirecodec.resolve_codec("sparse"), wirecodec.SparseCodec)
